@@ -1,0 +1,86 @@
+"""§Perf hillclimb for the paper's own technique: measured Graph500 TEPS.
+
+Baseline-to-optimized ladder (all MEASURED wall-clock on this machine,
+harmonic-mean TEPS across roots):
+
+  B0  topdown            pure top-down (no direction optimization)
+  B1  bottomup_nosimd    pure Algorithm-2 bottom-up
+  B2  hybrid_nosimd      hybrid with non-SIMD bottom-up (paper baseline)
+  B3  hybrid             + vectorised probe, MAX_POS=8 (paper-faithful)
+  O1  hybrid, no fallback-skip   (ablate the beyond-paper lax.cond)
+  O2  MAX_POS sweep      {2, 4, 8, 16, 32}
+  O3  alpha/beta sweep   switching thresholds
+
+Writes artifacts/bfs_perf.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.graph.generator import rmat_graph
+from repro.graph.graph500 import run_graph500
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts")
+
+
+def run(scale: int = 14, edgefactor: int = 16, roots: int = 16, seed: int = 0):
+    g = rmat_graph(scale, edgefactor, seed)
+    out = {"scale": scale, "edgefactor": edgefactor, "roots": roots,
+           "ladder": {}, "max_pos_sweep": {}, "alpha_beta_sweep": {},
+           "fallback_ablation": {}}
+
+    def teps(**kw):
+        res = run_graph500(scale, edgefactor, num_roots=roots, seed=seed,
+                           graph=g, **kw)
+        return res.harmonic_mean_teps
+
+    print(f"# BFS hillclimb: SCALE={scale} ef={edgefactor} roots={roots}")
+    for tag, kw in [("B0_topdown", dict(mode="topdown")),
+                    ("B1_bottomup_nosimd", dict(mode="bottomup_nosimd")),
+                    ("B2_hybrid_nosimd", dict(mode="hybrid_nosimd")),
+                    ("B3_hybrid_simd", dict(mode="hybrid"))]:
+        v = teps(**kw)
+        out["ladder"][tag] = v
+        print(f"  {tag:22s} {v / 1e6:10.2f} MTEPS")
+
+    v = teps(mode="hybrid", skip_empty_fallback=False)
+    out["fallback_ablation"]["always_fallback"] = v
+    out["fallback_ablation"]["with_skip"] = out["ladder"]["B3_hybrid_simd"]
+    print(f"  {'O1_always_fallback':22s} {v / 1e6:10.2f} MTEPS")
+
+    for mp in (2, 4, 8, 16, 32):
+        v = teps(mode="hybrid", max_pos=mp)
+        out["max_pos_sweep"][mp] = v
+        print(f"  O2_max_pos={mp:<3d}         {v / 1e6:10.2f} MTEPS")
+
+    for a, b in ((4.0, 24.0), (8.0, 24.0), (14.0, 24.0), (28.0, 24.0),
+                 (14.0, 8.0), (14.0, 64.0)):
+        v = teps(mode="hybrid", alpha=a, beta=b)
+        out["alpha_beta_sweep"][f"a{a:g}_b{b:g}"] = v
+        print(f"  O3_alpha={a:<4g} beta={b:<4g} {v / 1e6:10.2f} MTEPS")
+
+    # O4: beyond-paper ELL top-down (bounded slabs + residue fallback)
+    out["ell_topdown"] = {}
+    for tag, kw in [("O4_ell_topdown", dict(mode="hybrid", td_impl="ell")),
+                    ("O4_ell_td_alpha4", dict(mode="hybrid", td_impl="ell",
+                                              alpha=4.0)),
+                    ("O4_ell_pure_td", dict(mode="topdown", td_impl="ell"))]:
+        v = teps(**kw)
+        out["ell_topdown"][tag] = v
+        print(f"  {tag:22s} {v / 1e6:10.2f} MTEPS")
+
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"bfs_perf_s{scale}_ef{edgefactor}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    scale = int(sys.argv[1]) if len(sys.argv) > 1 else 14
+    ef = int(sys.argv[2]) if len(sys.argv) > 2 else 16
+    run(scale, ef)

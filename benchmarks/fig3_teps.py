@@ -1,0 +1,38 @@
+"""Paper Figure 3 analog: harmonic-mean TEPS across SCALE x edgefactor for
+the SIMD hybrid (ours), the non-SIMD hybrid (paper's blue line) and the
+pure top-down baseline.
+
+Wall-clock on the CPU container is not comparable to KNC GTEPS; the
+*relative* claims are whats validated: SIMD > non-SIMD, gap grows with
+edgefactor, hybrid > top-down.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.generator import rmat_graph
+from repro.graph.graph500 import run_graph500
+
+MODES = ("hybrid", "hybrid_nosimd", "topdown")
+
+
+def run(scales=(10, 11, 12), edgefactors=(16, 32, 64), roots: int = 8,
+        seed: int = 0):
+    print("# Fig 3 analog: harmonic-mean TEPS (CPU wall-clock)")
+    print(f"{'scale':>5s} {'ef':>3s} " + " ".join(f"{m:>16s}" for m in MODES))
+    results = {}
+    for ef in edgefactors:
+        for sc in scales:
+            g = rmat_graph(sc, ef, seed)
+            vals = []
+            for mode in MODES:
+                res = run_graph500(sc, ef, mode=mode, num_roots=roots,
+                                   seed=seed, graph=g)
+                results[(sc, ef, mode)] = res.harmonic_mean_teps
+                vals.append(res.harmonic_mean_teps)
+            print(f"{sc:5d} {ef:3d} " + " ".join(f"{v:16,.0f}" for v in vals))
+    return results
+
+
+if __name__ == "__main__":
+    run()

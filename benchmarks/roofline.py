@@ -1,0 +1,69 @@
+"""Aggregate artifacts/dryrun/*.json into the §Roofline table (markdown)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "dryrun")
+
+
+def load_records(mesh: str | None = "pod16x16"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        r = json.load(open(f))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def device_gb(r):
+    m = r.get("memory") or {}
+    vals = [m.get("argument_bytes") or 0, m.get("temp_bytes") or 0,
+            m.get("output_bytes") or 0]
+    return (sum(vals) - (m.get("alias_bytes") or 0)) / 1e9
+
+
+def markdown_table(mesh="pod16x16"):
+    lines = [
+        "| arch | shape | kind | GB/dev | compute_s | memory_s | "
+        "collective_s | dominant | roofline frac | model/HLO flops |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_records(mesh):
+        if "arch" not in r:
+            continue   # bfs-graph500 cells have their own table
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+                         f"— | — | — | — | skipped | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+                         f"ERROR | | | | | | |")
+            continue
+        t = r["roofline"]
+        ratio = r.get("model_to_hlo_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{device_gb(r):.1f} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['dominant']} | {t['roofline_fraction']:.3f} | "
+            f"{ratio:.2f} |" if ratio else
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{device_gb(r):.1f} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['dominant']} | {t['roofline_fraction']:.3f} | — |")
+    return "\n".join(lines)
+
+
+def run():
+    for mesh in ("pod16x16", "pod2x16x16"):
+        print(f"\n## Roofline table — mesh {mesh}\n")
+        print(markdown_table(mesh))
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Paper Table 2 analog: hybrid BFS per-layer switching trace.
+
+Prints the layer-by-layer (v_f, e_f, e_u, f, g, approach) table for one
+Graph500 BFS, showing the TD -> BU -> TD switching points.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hybrid import ALPHA_DEFAULT, BETA_DEFAULT, bfs
+from repro.graph.generator import rmat_graph, sample_roots
+
+
+def run(scale: int = 12, edgefactor: int = 16, seed: int = 0):
+    g = rmat_graph(scale, edgefactor, seed)
+    root = int(sample_roots(g, 1, seed=seed + 1)[0])
+    out = bfs(g, root, "hybrid")
+    n_layers = int(out.num_layers)
+    rows = []
+    print(f"# Table 2 analog: SCALE={scale} edgefactor={edgefactor} "
+          f"root={root}  (alpha={ALPHA_DEFAULT}, beta={BETA_DEFAULT})")
+    print(f"{'layer':>5s} {'v_f':>9s} {'e_f':>11s} {'e_u':>12s} "
+          f"{'f=e_u/a':>11s} {'g=n/b':>9s} approach")
+    for i in range(n_layers):
+        vf = int(out.trace_vf[i])
+        ef = int(out.trace_ef[i])
+        eu = int(out.trace_eu[i])
+        f_thr = eu / ALPHA_DEFAULT
+        g_thr = g.n / BETA_DEFAULT
+        approach = "top-down" if int(out.trace_dir[i]) == 0 else "bottom-up"
+        print(f"{i + 1:5d} {vf:9d} {ef:11d} {eu:12d} {f_thr:11.0f} "
+              f"{g_thr:9.0f} {approach}")
+        rows.append(dict(layer=i + 1, v_f=vf, e_f=ef, e_u=eu,
+                         approach=approach))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

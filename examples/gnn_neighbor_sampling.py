@@ -1,0 +1,55 @@
+"""Neighbour-sampled GNN training — the minibatch_lg pipeline end to end.
+
+  PYTHONPATH=src python examples/gnn_neighbor_sampling.py
+
+The sampler is capped BFS frontier expansion (the paper's probe gather with
+random positions); every step samples a fresh subgraph from a Graph500
+graph and takes one GIN training step on it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import make_step
+from repro.configs.reduced import reduce_arch
+from repro.graph.generator import rmat_graph
+from repro.graph.sampler import dedup_count, sampled_graph_batch
+from repro.models.gnn.gin import GINConfig, gin_loss, init_gin
+from repro.optim.adamw import OptConfig, adamw_update, init_opt_state
+
+STEPS, BATCH_NODES, FANOUT = 30, 64, (5, 3)
+
+g = rmat_graph(12, 8, seed=0)
+n_classes = 6
+feats = jax.random.normal(jax.random.PRNGKey(0), (g.n, 16))
+labels = jax.random.randint(jax.random.PRNGKey(1), (g.n,), 0, n_classes)
+
+cfg = GINConfig(d_feat=16, d_hidden=32, n_layers=2, n_classes=n_classes,
+                task="node")
+params, _ = init_gin(jax.random.PRNGKey(2), cfg)
+opt_cfg = OptConfig(lr=3e-3)
+opt = init_opt_state(params, opt_cfg)
+
+
+@jax.jit
+def step(params, opt, gb):
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: gin_loss(p, gb, cfg), has_aux=True)(params)
+    params, opt = adamw_update(params, grads, opt, opt_cfg)
+    return params, opt, loss
+
+
+print(f"graph n={g.n:,} m={g.m:,}; sampling {BATCH_NODES} seeds x "
+      f"fanout {FANOUT} per step")
+for i in range(STEPS):
+    key = jax.random.PRNGKey(100 + i)
+    seeds = jax.random.choice(key, g.n, (BATCH_NODES,), replace=False)
+    gb = sampled_graph_batch(key, g, seeds.astype(jnp.int32), feats, labels,
+                             fanout=FANOUT, n_classes=n_classes)
+    params, opt, loss = step(params, opt, gb)
+    if i % 10 == 0 or i == STEPS - 1:
+        uniq = int(dedup_count(jnp.concatenate([seeds.astype(jnp.int32)]),
+                               g.n))
+        print(f"step {i:3d} loss={float(loss):.4f} "
+              f"subgraph_nodes={gb.n_nodes} unique_seeds={uniq}")
+print("done")

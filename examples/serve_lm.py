@@ -1,0 +1,13 @@
+"""Batched LM serving: prefill + iterative decode with a donated KV cache.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.configs.reduced import reduce_arch
+from repro.launch.serve import serve_lm
+
+arch = reduce_arch("qwen3-moe-30b-a3b")
+print(f"serving reduced {arch.arch_id} "
+      f"({arch.model_cfg.param_count():,} params, MoE "
+      f"{arch.model_cfg.moe.num_experts} experts top-"
+      f"{arch.model_cfg.moe.top_k})")
+serve_lm(arch, requests=4, prompt_len=32, new_tokens=16)

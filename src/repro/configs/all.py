@@ -1,0 +1,11 @@
+"""Import all architecture configs (populates the registry)."""
+import repro.configs.phi4_mini_3_8b        # noqa: F401
+import repro.configs.qwen15_32b            # noqa: F401
+import repro.configs.llama3_405b           # noqa: F401
+import repro.configs.granite_moe_1b_a400m  # noqa: F401
+import repro.configs.qwen3_moe_30b_a3b     # noqa: F401
+import repro.configs.gin_tu                # noqa: F401
+import repro.configs.gcn_cora              # noqa: F401
+import repro.configs.mace_arch             # noqa: F401
+import repro.configs.egnn_arch             # noqa: F401
+import repro.configs.dien_arch             # noqa: F401

@@ -1,0 +1,327 @@
+"""Architecture registry: config dataclasses, input-spec builders, step
+builders. Every assigned architecture registers an ``Arch`` here; the
+launcher, dry-run, trainer and tests all consume this one interface.
+
+``input_specs(arch, shape)`` returns (pytree of ShapeDtypeStruct, logical
+spec pytree) — weak-type-correct stand-ins, no device allocation. The dry-run
+lowers ``make_step(arch, shape)`` against them.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import (OptConfig, adamw_update, clip_by_global_norm,
+                               init_opt_state, opt_state_specs)
+
+PAD_MULTIPLE = 8192   # node/edge padding so graph dims divide any mesh
+
+
+@dataclass(frozen=True)
+class Shape:
+    shape_id: str
+    kind: str                  # train | prefill | decode | serve | retrieval
+    dims: dict
+    skip_reason: str | None = None
+
+
+@dataclass(frozen=True)
+class Arch:
+    arch_id: str
+    family: str                # lm-dense | lm-moe | gnn | recsys
+    model_cfg: Any
+    shapes: tuple[Shape, ...]
+    opt: OptConfig = OptConfig()
+    source: str = ""
+    # grad-accumulation microbatches for train shapes (activation memory
+    # scales ~1/k; the scan also gives XLA a window to overlap the grad
+    # reduce-scatter of microbatch i with compute of i+1)
+    microbatches: int = 1
+
+    def shape(self, shape_id: str) -> Shape:
+        for s in self.shapes:
+            if s.shape_id == shape_id:
+                return s
+        raise KeyError(f"{self.arch_id} has no shape {shape_id}")
+
+
+REGISTRY: dict[str, Arch] = {}
+
+
+def register(arch: Arch) -> Arch:
+    REGISTRY[arch.arch_id] = arch
+    return arch
+
+
+def get_arch(arch_id: str) -> Arch:
+    import repro.configs.all  # noqa: F401  (populates REGISTRY)
+    return REGISTRY[arch_id]
+
+
+def list_archs() -> list[str]:
+    import repro.configs.all  # noqa: F401
+    return sorted(REGISTRY)
+
+
+def _pad(n: int, mult: int = PAD_MULTIPLE) -> int:
+    return -(-n // mult) * mult
+
+
+# ------------------------------------------------------------ param builders
+
+
+def effective_cfg(arch: Arch, shape: Shape | None):
+    """Per-shape config overrides (GNN input dims / task come from the
+    shape; LM/recsys configs are shape-independent)."""
+    cfg = arch.model_cfg
+    if shape is None or arch.family != "gnn":
+        return cfg
+    import dataclasses
+    over = {}
+    if "d_feat" in shape.dims:
+        over["d_feat"] = shape.dims["d_feat"]
+    if "n_classes" in shape.dims and hasattr(cfg, "n_classes"):
+        over["n_classes"] = shape.dims["n_classes"]
+    if hasattr(cfg, "task"):
+        over["task"] = "graph" if shape.dims.get("n_graphs", 1) > 1 else "node"
+    return dataclasses.replace(cfg, **over)
+
+
+def param_builders(arch: Arch, shape: Shape | None = None):
+    """Returns (init_fn(key) -> (params, specs), loss_fn(params, batch))."""
+    fam = arch.family
+    cfg = effective_cfg(arch, shape)
+    if fam in ("lm-dense", "lm-moe"):
+        from repro.models.transformer import init_lm, lm_loss
+        return (lambda k: init_lm(k, cfg)), (lambda p, b: lm_loss(p, b, cfg))
+    if fam == "gnn":
+        name = type(cfg).__name__
+        if name == "GCNConfig":
+            from repro.models.gnn.gcn import gcn_loss, init_gcn
+            return (lambda k: init_gcn(k, cfg)), (lambda p, b: gcn_loss(p, b, cfg))
+        if name == "GINConfig":
+            from repro.models.gnn.gin import gin_loss, init_gin
+            return (lambda k: init_gin(k, cfg)), (lambda p, b: gin_loss(p, b, cfg))
+        if name == "EGNNConfig":
+            from repro.models.gnn.egnn import egnn_loss, init_egnn
+            return (lambda k: init_egnn(k, cfg)), (lambda p, b: egnn_loss(p, b, cfg))
+        if name == "MACEConfig":
+            from repro.models.gnn.mace import init_mace, mace_loss
+            return (lambda k: init_mace(k, cfg)), (lambda p, b: mace_loss(p, b, cfg))
+    if fam == "recsys":
+        from repro.models.recsys.dien import dien_loss, init_dien
+        return (lambda k: init_dien(k, cfg)), (lambda p, b: dien_loss(p, b, cfg))
+    raise ValueError(fam)
+
+
+def param_shapes(arch: Arch, shape: Shape | None = None):
+    """(ShapeDtypeStruct tree, logical spec tree) — no allocation."""
+    init_fn, _ = param_builders(arch, shape)
+    box = {}
+
+    def f(k):
+        p, s = init_fn(k)
+        box["s"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["s"]
+
+
+# ------------------------------------------------------------- input builders
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _lm_inputs(arch: Arch, shape: Shape):
+    cfg = arch.model_cfg
+    d = shape.dims
+    if shape.kind == "train":
+        b, s = d["global_batch"], d["seq_len"]
+        batch = {"tokens": _sds((b, s), jnp.int32),
+                 "labels": _sds((b, s), jnp.int32)}
+        specs = {"tokens": ("batch", None), "labels": ("batch", None)}
+        return batch, specs
+    if shape.kind == "prefill":
+        b, s = d["global_batch"], d["seq_len"]
+        return ({"tokens": _sds((b, s), jnp.int32)},
+                {"tokens": ("batch", None)})
+    if shape.kind == "decode":
+        b, s = d["global_batch"], d["seq_len"]
+        kv = (cfg.n_layers, b, s, cfg.n_kv_heads, cfg.d_head)
+        kv_spec = (None, "batch", "kv_seq", "kv_heads", None)
+        batch = {"token": _sds((b, 1), jnp.int32),
+                 "cache_k": _sds(kv, cfg.cache_dtype),
+                 "cache_v": _sds(kv, cfg.cache_dtype),
+                 "cache_len": _sds((), jnp.int32)}
+        specs = {"token": ("batch", None), "cache_k": kv_spec,
+                 "cache_v": kv_spec, "cache_len": None}
+        return batch, specs
+    raise ValueError(shape.kind)
+
+
+def _gnn_inputs(arch: Arch, shape: Shape):
+    d = shape.dims
+    n = _pad(d["n_nodes"])
+    e = _pad(d["n_edges"])
+    f = d["d_feat"]
+    g = d.get("n_graphs", 1)
+    from repro.models.gnn.common import GraphBatch
+    batch = GraphBatch(
+        senders=_sds((e,), jnp.int32), receivers=_sds((e,), jnp.int32),
+        edge_mask=_sds((e,), jnp.bool_), feats=_sds((n, f), jnp.float32),
+        pos=_sds((n, 3), jnp.float32), labels=_sds((n,), jnp.int32),
+        node_mask=_sds((n,), jnp.bool_), graph_ids=_sds((n,), jnp.int32),
+        n_graphs=g)
+    specs = GraphBatch(
+        senders=("edges",), receivers=("edges",), edge_mask=("edges",),
+        feats=("nodes", None), pos=("nodes", None), labels=("nodes",),
+        node_mask=("nodes",), graph_ids=("nodes",), n_graphs=g)
+    return batch, specs
+
+
+def _recsys_inputs(arch: Arch, shape: Shape):
+    cfg = arch.model_cfg
+    d = shape.dims
+    b = d["batch"]
+    t = cfg.seq_len
+    m = cfg.profile_bag
+    base = {
+        "target_item": _sds((b,), jnp.int32),
+        "target_cat": _sds((b,), jnp.int32),
+        "hist_items": _sds((b, t), jnp.int32),
+        "hist_cats": _sds((b, t), jnp.int32),
+        "hist_mask": _sds((b, t), jnp.bool_),
+        "profile_ids": _sds((b, m), jnp.int32),
+        "profile_mask": _sds((b, m), jnp.bool_),
+    }
+    specs = {k: ("batch",) + (None,) * (len(v.shape) - 1)
+             for k, v in base.items()}
+    if shape.kind == "train":
+        base["labels"] = _sds((b,), jnp.float32)
+        base["neg_items"] = _sds((b, t), jnp.int32)
+        specs["labels"] = ("batch",)
+        specs["neg_items"] = ("batch", None)
+    if shape.kind == "retrieval":
+        nc = d["n_candidates"]
+        base["candidate_ids"] = _sds((nc,), jnp.int32)
+        specs["candidate_ids"] = ("candidates",)
+    return base, specs
+
+
+def input_specs(arch: Arch, shape: Shape):
+    if arch.family in ("lm-dense", "lm-moe"):
+        return _lm_inputs(arch, shape)
+    if arch.family == "gnn":
+        return _gnn_inputs(arch, shape)
+    if arch.family == "recsys":
+        return _recsys_inputs(arch, shape)
+    raise ValueError(arch.family)
+
+
+# --------------------------------------------------------------- step makers
+
+
+def make_step(arch: Arch, shape: Shape) -> Callable:
+    """The function the dry-run lowers / the trainer executes.
+
+    train:   step(params, opt_state, batch) -> (params, opt_state, metrics)
+    prefill: step(params, batch) -> (logits, cache)
+    decode:  step(params, batch) -> (logits, new_cache)
+    serve:   step(params, batch) -> outputs
+    """
+    cfg = effective_cfg(arch, shape)
+    _, loss_fn = param_builders(arch, shape)
+
+    if shape.kind == "train":
+        opt_cfg = arch.opt
+        k = max(1, arch.microbatches)
+
+        def _grads(params, batch):
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+        def train_step(params, opt_state, batch):
+            if k > 1:
+                acc_dt = jnp.dtype(opt_cfg.accum_dtype)
+                mb = jax.tree.map(
+                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                    batch)
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+                def micro(acc, b):
+                    (loss, metrics), g = _grads(params, b)
+                    acc = jax.tree.map(
+                        lambda a, gg: a + (gg / k).astype(acc_dt), acc, g)
+                    return acc, loss
+
+                grads, losses = jax.lax.scan(micro, zeros, mb)
+                loss = losses.mean()
+                metrics = {}
+            else:
+                (loss, metrics), grads = _grads(params, batch)
+            grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+            params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+            metrics = dict(metrics)
+            metrics.update(loss=loss, grad_norm=gnorm)
+            return params, opt_state, metrics
+        return train_step
+
+    if shape.kind == "prefill":
+        from repro.models.transformer import lm_prefill
+
+        def prefill_step(params, batch):
+            return lm_prefill(params, batch["tokens"], cfg)
+        return prefill_step
+
+    if shape.kind == "decode":
+        from repro.models.transformer import lm_decode_step
+
+        def decode_step(params, batch):
+            return lm_decode_step(params, batch["token"],
+                                  (batch["cache_k"], batch["cache_v"]),
+                                  batch["cache_len"], cfg)
+        return decode_step
+
+    if shape.kind == "serve":
+        if arch.family == "recsys":
+            from repro.models.recsys.dien import dien_forward
+
+            def serve_step(params, batch):
+                return jax.nn.sigmoid(dien_forward(params, batch, cfg))
+            return serve_step
+
+        def fwd_step(params, batch):   # GNN forward-only
+            loss, metrics = loss_fn(params, batch)
+            return metrics
+        return fwd_step
+
+    if shape.kind == "retrieval":
+        from repro.models.recsys.dien import dien_retrieval
+
+        def retrieval_step(params, batch):
+            scores, top = dien_retrieval(params, batch, cfg)
+            return top
+        return retrieval_step
+
+    raise ValueError(shape.kind)
+
+
+def step_arg_specs(arch: Arch, shape: Shape):
+    """((args shapes), (args logical specs)) matching make_step's signature."""
+    batch, batch_specs = input_specs(arch, shape)
+    if shape.kind == "train":
+        p_shapes, p_specs = param_shapes(arch, shape)
+        opt_shapes = jax.eval_shape(
+            lambda: init_opt_state(p_shapes, arch.opt))
+        o_specs = opt_state_specs(p_specs, arch.opt, p_shapes)
+        return (p_shapes, opt_shapes, batch), (p_specs, o_specs, batch_specs)
+    p_shapes, p_specs = param_shapes(arch, shape)
+    return (p_shapes, batch), (p_specs, batch_specs)

@@ -1,0 +1,11 @@
+"""egnn [arXiv:2102.09844] — E(n)-equivariant GNN, 4L."""
+from repro.configs.base import Arch, register
+from repro.configs.gnn_shapes import gnn_shapes
+from repro.optim.adamw import OptConfig
+from repro.models.gnn.egnn import EGNNConfig
+
+ARCH = register(Arch(
+    arch_id="egnn", family="gnn",
+    model_cfg=EGNNConfig(name="egnn", n_layers=4, d_hidden=64),
+    shapes=gnn_shapes(), opt=OptConfig(moment_dtype="float32"),
+    source="arXiv:2102.09844"))

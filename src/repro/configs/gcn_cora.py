@@ -1,0 +1,11 @@
+"""gcn-cora [arXiv:1609.02907] — 2L GCN, sym-normalised SpMM."""
+from repro.configs.base import Arch, register
+from repro.configs.gnn_shapes import gnn_shapes
+from repro.optim.adamw import OptConfig
+from repro.models.gnn.gcn import GCNConfig
+
+ARCH = register(Arch(
+    arch_id="gcn-cora", family="gnn",
+    model_cfg=GCNConfig(name="gcn-cora", n_layers=2, d_hidden=16, norm="sym"),
+    shapes=gnn_shapes(), opt=OptConfig(moment_dtype="float32"),
+    source="arXiv:1609.02907"))

@@ -1,0 +1,11 @@
+"""gin-tu [arXiv:1810.00826] — GIN, 5L sum-agg, learnable eps."""
+from repro.configs.base import Arch, register
+from repro.configs.gnn_shapes import gnn_shapes
+from repro.optim.adamw import OptConfig
+from repro.models.gnn.gin import GINConfig
+
+ARCH = register(Arch(
+    arch_id="gin-tu", family="gnn",
+    model_cfg=GINConfig(name="gin-tu", n_layers=5, d_hidden=64),
+    shapes=gnn_shapes(), opt=OptConfig(moment_dtype="float32"),
+    source="arXiv:1810.00826"))

@@ -1,0 +1,37 @@
+"""Shared GNN shape contract (all four GNN archs).
+
+Shapes (same contract for all four archs):
+  full_graph_sm — cora-scale full-batch (n=2,708 e=10,556 d=1,433)
+  minibatch_lg  — reddit-scale sampled training: the *step input* is the
+                  sampled subgraph from batch_nodes=1,024 with fanout 15-10
+                  (1,024 + 15,360 + 153,600 nodes; 168,960 edges; d=602);
+                  the neighbour sampler (repro.graph.sampler) produces it
+                  from the full 232,965-node / 114.6M-edge graph.
+  ogb_products  — full-batch-large (n=2,449,029 e=61,859,140 d=100)
+  molecule      — 128 packed molecular graphs (30 nodes / 64 edges each)
+"""
+from repro.configs.base import Shape
+
+MINIBATCH_NODES = 1024 + 1024 * 15 + 1024 * 15 * 10     # 169,984
+MINIBATCH_EDGES = 1024 * 15 + 1024 * 15 * 10            # 168,960
+
+
+def gnn_shapes() -> tuple[Shape, ...]:
+    return (
+        Shape("full_graph_sm", "train",
+              dims=dict(n_nodes=2708, n_edges=10556, d_feat=1433,
+                        n_classes=7)),
+        Shape("minibatch_lg", "train",
+              dims=dict(n_nodes=MINIBATCH_NODES, n_edges=MINIBATCH_EDGES,
+                        d_feat=602, n_classes=41,
+                        full_nodes=232965, full_edges=114615892,
+                        batch_nodes=1024, fanout=(15, 10))),
+        Shape("ogb_products", "train",
+              dims=dict(n_nodes=2449029, n_edges=61859140, d_feat=100,
+                        n_classes=47)),
+        Shape("molecule", "train",
+              dims=dict(n_nodes=30 * 128, n_edges=64 * 128, d_feat=64,
+                        n_classes=16, n_graphs=128)),
+    )
+
+

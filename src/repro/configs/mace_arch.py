@@ -1,0 +1,13 @@
+"""mace [arXiv:2206.07697] — E(3)-equivariant, l_max=2, correlation 3."""
+from repro.configs.base import Arch, register
+from repro.configs.gnn_shapes import gnn_shapes
+from repro.optim.adamw import OptConfig
+from repro.models.gnn.mace import MACEConfig
+
+ARCH = register(Arch(
+    arch_id="mace", family="gnn",
+    model_cfg=MACEConfig(name="mace", n_layers=2, d_hidden=128, l_max=2,
+                         correlation=3, n_rbf=8,
+                         dtype="bfloat16", remat=False),
+    shapes=gnn_shapes(), opt=OptConfig(moment_dtype="float32"),
+    source="arXiv:2206.07697"))

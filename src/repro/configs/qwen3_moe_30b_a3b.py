@@ -1,0 +1,21 @@
+"""qwen3-moe-30b-a3b [hf:Qwen/Qwen3-30B-A3B] — 48L MoE, 128 experts top-8."""
+from repro.configs.base import Arch, register
+from repro.configs.lm_shapes import lm_shapes
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+from repro.optim.adamw import OptConfig
+
+ARCH = register(Arch(
+    arch_id="qwen3-moe-30b-a3b",
+    family="lm-moe",
+    model_cfg=LMConfig(
+        name="qwen3-moe-30b-a3b", n_layers=48, d_model=2048, n_heads=32,
+        n_kv_heads=4, d_head=128, d_ff=0, vocab=151936,
+        rope_theta=1000000.0, dtype="bfloat16", param_dtype="bfloat16",
+        remat=True,
+        moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=768)),
+    shapes=lm_shapes(),
+    opt=OptConfig(moment_dtype="float32"),
+    microbatches=8,
+    source="hf:Qwen/Qwen3-30B-A3B",
+))

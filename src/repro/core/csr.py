@@ -1,0 +1,103 @@
+"""CSR graph container and builders.
+
+Layout (all static shapes, jit-friendly):
+  row_ptr : int32[n+1]   start offset of each vertex's adjacency slice
+  col_idx : int32[m]     neighbour ids, sorted within each row
+  src_idx : int32[m]     CSR row expansion (owner of edge slot e) — enables
+                         the edge-parallel top-down / fallback formulations
+
+``col_idx`` entries are always valid vertex ids (no padding inside rows);
+edge-parallel code masks by frontier/visited state instead.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class CSRGraph(NamedTuple):
+    row_ptr: jnp.ndarray  # int32[n+1]
+    col_idx: jnp.ndarray  # int32[m]
+    src_idx: jnp.ndarray  # int32[m]
+
+    @property
+    def n(self) -> int:
+        return self.row_ptr.shape[0] - 1
+
+    @property
+    def m(self) -> int:
+        return self.col_idx.shape[0]
+
+    @property
+    def deg(self) -> jnp.ndarray:
+        return self.row_ptr[1:] - self.row_ptr[:-1]
+
+
+def from_edges(src: np.ndarray, dst: np.ndarray, n: int,
+               symmetrize: bool = True, drop_self_loops: bool = True,
+               dedup: bool = False) -> CSRGraph:
+    """Build a CSR graph from a directed edge list (host-side, numpy).
+
+    Graph500 graphs are undirected: ``symmetrize`` adds the reverse edges.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if symmetrize:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    if drop_self_loops:
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+    key = src * n + dst
+    order = np.argsort(key, kind="stable")
+    src, dst = src[order], dst[order]
+    if dedup and len(src):
+        keep = np.ones(len(src), dtype=bool)
+        keep[1:] = (src[1:] != src[:-1]) | (dst[1:] != dst[:-1])
+        src, dst = src[keep], dst[keep]
+    counts = np.bincount(src, minlength=n)
+    row_ptr = np.zeros(n + 1, dtype=np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    return CSRGraph(
+        row_ptr=jnp.asarray(row_ptr, dtype=jnp.int32),
+        col_idx=jnp.asarray(dst, dtype=jnp.int32),
+        src_idx=jnp.asarray(src, dtype=jnp.int32),
+    )
+
+
+def to_numpy_adj(g: CSRGraph) -> tuple[np.ndarray, np.ndarray]:
+    """Host copies of (row_ptr, col_idx) for oracle/validator use."""
+    return np.asarray(g.row_ptr), np.asarray(g.col_idx)
+
+
+def relabel(g: CSRGraph, perm: np.ndarray) -> CSRGraph:
+    """Relabel vertices: new id of old vertex v is ``perm[v]``.
+
+    Used for BFS locality reordering (beyond-paper optimisation): vertices
+    visited consecutively get consecutive ids, improving gather locality of
+    both the probe kernel and GNN SpMM.
+    """
+    row_ptr, col_idx = to_numpy_adj(g)
+    n = g.n
+    perm = np.asarray(perm)
+    src = perm[np.asarray(g.src_idx)]
+    dst = perm[col_idx]
+    return from_edges(src, dst, n, symmetrize=False, drop_self_loops=False)
+
+
+def ell_pad(g: CSRGraph, k_max: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Restructure CSR rows into an ELL slab: int32[n, k_max] neighbour ids
+    (padded with n) + bool[n, k_max] validity. The paper's core insight —
+    restructure irregular data into a vector-friendly layout — applied to
+    message passing. Rows longer than k_max are truncated (caller handles
+    the residue via the edge-parallel path, mirroring MAX_POS + fallback).
+    """
+    n, rp, ci = g.n, g.row_ptr, g.col_idx
+    pos = jnp.arange(k_max, dtype=jnp.int32)[None, :]
+    starts = rp[:-1][:, None]
+    valid = pos < g.deg[:, None]
+    idx = jnp.clip(starts + pos, 0, g.m - 1)
+    neigh = jnp.where(valid, ci[idx], n)
+    return neigh.astype(jnp.int32), valid

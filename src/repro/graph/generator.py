@@ -1,0 +1,71 @@
+"""Graph500 Kronecker (R-MAT) graph generator.
+
+Follows the Graph500 reference spec: ``n = 2**scale`` vertices,
+``m = 2**scale * edgefactor`` undirected edges, initiator probabilities
+A=0.57, B=0.19, C=0.19, D=0.05, followed by a random vertex relabelling and
+edge-order shuffle (so vertex id carries no structural information).
+
+Vectorised: all ``scale`` quadrant choices for all ``m`` edges are sampled in
+one pass (numpy host-side — graph construction is part of the data pipeline,
+not the measured BFS kernel, same as the Graph500 harness).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.csr import CSRGraph, from_edges
+
+GRAPH500_ABCD = (0.57, 0.19, 0.19, 0.05)
+
+
+def rmat_edges(scale: int, edgefactor: int, seed: int = 0,
+               abcd: tuple[float, float, float, float] = GRAPH500_ABCD,
+               ) -> tuple[np.ndarray, np.ndarray, int]:
+    """Sample directed R-MAT edges; returns (src, dst, n)."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = n * edgefactor
+    a, b, c, d = abcd
+    # Quadrant per (edge, bit): 0->(0,0) w.p. A, 1->(0,1) B, 2->(1,0) C, 3->(1,1) D
+    u = rng.random((m, scale))
+    q = np.zeros((m, scale), dtype=np.int8)
+    q += (u >= a).astype(np.int8)
+    q += (u >= a + b).astype(np.int8)
+    q += (u >= a + b + c).astype(np.int8)
+    src_bits = (q >= 2).astype(np.int64)
+    dst_bits = (q & 1).astype(np.int64)
+    weights = 1 << np.arange(scale - 1, -1, -1, dtype=np.int64)
+    src = src_bits @ weights
+    dst = dst_bits @ weights
+    # Graph500: random relabelling + edge shuffle
+    perm = rng.permutation(n)
+    src, dst = perm[src], perm[dst]
+    order = rng.permutation(m)
+    return src[order], dst[order], n
+
+
+def rmat_graph(scale: int, edgefactor: int, seed: int = 0,
+               abcd: tuple[float, float, float, float] = GRAPH500_ABCD,
+               ) -> CSRGraph:
+    """Generate a symmetrised CSR Graph500 graph."""
+    src, dst, n = rmat_edges(scale, edgefactor, seed, abcd)
+    return from_edges(src, dst, n, symmetrize=True, drop_self_loops=True)
+
+
+def uniform_random_graph(n: int, m: int, seed: int = 0) -> CSRGraph:
+    """Erdős–Rényi-ish G(n, m) graph — used by property tests."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    return from_edges(src, dst, n, symmetrize=True, drop_self_loops=True)
+
+
+def sample_roots(g: CSRGraph, num: int, seed: int = 1,
+                 require_edges: bool = True) -> np.ndarray:
+    """Graph500 root sampling: ``num`` distinct roots; roots with degree 0
+    are excluded when ``require_edges`` (they'd traverse 0 edges)."""
+    rng = np.random.default_rng(seed)
+    deg = np.asarray(g.deg)
+    candidates = np.flatnonzero(deg > 0) if require_edges else np.arange(g.n)
+    num = min(num, len(candidates))
+    return rng.choice(candidates, size=num, replace=False)

@@ -1,0 +1,77 @@
+"""Graph500 experimental harness (paper §6).
+
+Runs the benchmark protocol: generate a Kronecker graph, pick 64 random
+roots (degree>0, as the reference code does), run BFS per root with the
+compiled executable, collect per-root wall time and TEPS, and report the
+harmonic mean (the paper's headline number) plus min/max/mean.
+
+TEPS counts the *undirected* edges of the traversed component
+(sum of degrees of reached vertices / 2), per the Graph500 spec.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.core.csr import CSRGraph, to_numpy_adj
+from repro.core.hybrid import bfs
+from repro.graph.generator import rmat_graph, sample_roots
+from repro.graph.validate import validate_bfs_tree
+
+
+@dataclass
+class Graph500Result:
+    scale: int
+    edgefactor: int
+    mode: str
+    teps: list[float] = field(default_factory=list)
+    times: list[float] = field(default_factory=list)
+    traversed: list[int] = field(default_factory=list)
+
+    @property
+    def harmonic_mean_teps(self) -> float:
+        t = np.asarray([x for x in self.teps if x > 0])
+        return float(len(t) / np.sum(1.0 / t)) if len(t) else 0.0
+
+    def summary(self) -> dict:
+        t = np.asarray(self.teps)
+        return dict(scale=self.scale, edgefactor=self.edgefactor,
+                    mode=self.mode, nroots=len(t),
+                    harmonic_mean_teps=self.harmonic_mean_teps,
+                    mean_teps=float(t.mean()) if len(t) else 0.0,
+                    max_teps=float(t.max()) if len(t) else 0.0,
+                    min_teps=float(t.min()) if len(t) else 0.0,
+                    mean_time=float(np.mean(self.times)) if self.times else 0.0)
+
+
+def run_graph500(scale: int, edgefactor: int, mode: str = "hybrid",
+                 num_roots: int = 64, seed: int = 0, validate: bool = False,
+                 alpha: float = 14.0, beta: float = 24.0, max_pos: int = 8,
+                 probe_impl: str = "xla", warmup: bool = True,
+                 skip_empty_fallback: bool = True, td_impl: str = "edge",
+                 graph: CSRGraph | None = None) -> Graph500Result:
+    g = graph if graph is not None else rmat_graph(scale, edgefactor, seed)
+    roots = sample_roots(g, num_roots, seed=seed + 1)
+    res = Graph500Result(scale=scale, edgefactor=edgefactor, mode=mode)
+
+    run = lambda r: bfs(g, r, mode, alpha, beta, max_pos, probe_impl,
+                        skip_empty_fallback, td_impl)
+    if warmup:
+        jax.block_until_ready(run(int(roots[0])))  # compile once
+
+    rp, ci = (to_numpy_adj(g) if validate else (None, None))
+    for r in roots:
+        t0 = time.perf_counter()
+        out = run(int(r))
+        jax.block_until_ready(out.parent)
+        dt = time.perf_counter() - t0
+        edges = int(out.edges_traversed) // 2
+        res.times.append(dt)
+        res.traversed.append(edges)
+        res.teps.append(edges / dt if dt > 0 else 0.0)
+        if validate:
+            validate_bfs_tree(rp, ci, np.asarray(out.parent), int(r))
+    return res

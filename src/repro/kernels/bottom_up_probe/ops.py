@@ -1,0 +1,22 @@
+"""Jitted public wrapper for the bottom_up_probe kernel.
+
+``bottom_up_probe`` is what ``repro.core.bottomup`` calls when
+``probe_impl='pallas'``; it matches the `_probe_xla` contract:
+(found bool[n], parent int32[n]).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default
+from repro.kernels.bottom_up_probe.kernel import bottom_up_probe_pallas
+
+
+def bottom_up_probe(row_ptr, col_idx, frontier_words, unvisited, parent,
+                    max_pos: int = 8):
+    starts = row_ptr[:-1]
+    deg = row_ptr[1:] - row_ptr[:-1]
+    found, par = bottom_up_probe_pallas(
+        starts, deg, unvisited, parent, col_idx, frontier_words,
+        max_pos=max_pos, interpret=interpret_default())
+    return found != 0, par

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the bottom_up_probe kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bottom_up_probe_ref(starts, deg, unvisited, parent, col_idx,
+                        frontier_words, max_pos: int = 8):
+    """Identical math to the kernel, plain jnp. Returns (found int32, parent)."""
+    m = col_idx.shape[0]
+    found = jnp.zeros_like(unvisited)
+    par = parent
+    for pos in range(max_pos):
+        live = unvisited & (~found) & (pos < deg)
+        idx = jnp.clip(starts + pos, 0, m - 1)
+        vadj = col_idx[idx]
+        word = (vadj >> 5).astype(jnp.int32)
+        bit = (vadj & 0x1F).astype(jnp.uint32)
+        w = frontier_words[word]
+        hit = live & (((w >> bit) & jnp.uint32(1)) == 1)
+        par = jnp.where(hit, vadj, par)
+        found = found | hit
+    return found.astype(jnp.int32), par

@@ -1,0 +1,33 @@
+"""Shared Pallas kernel utilities.
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU with ``interpret=True`` (the kernel body runs as pure JAX).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# One VPU tile: 8 sublanes x 128 lanes of int32/f32.
+SUBLANES = 8
+LANES = 128
+TILE = SUBLANES * LANES  # 1024 vertices / edges per grid step
+
+
+def interpret_default() -> bool:
+    """Run in interpret mode unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x: jnp.ndarray, multiple: int, axis: int = 0, value=0) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the ell_spmm kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ell_spmm_ref(neigh, valid, x):
+    n_src = x.shape[0]
+    idx = jnp.clip(neigh, 0, n_src - 1)
+    rows = x[idx]                                  # (n, k_max, d)
+    mask = (valid != 0)[..., None]
+    return jnp.sum(jnp.where(mask, rows, 0.0), axis=1).astype(jnp.float32)

@@ -1,0 +1,22 @@
+"""Jitted wrapper: full top-down step using the Pallas edge-scan kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bitmap
+from repro.core.csr import CSRGraph
+from repro.kernels.common import interpret_default
+from repro.kernels.topdown_scan.kernel import topdown_scan_pallas
+
+
+def topdown_step_pallas(g: CSRGraph, frontier, visited, parent):
+    """Drop-in replacement for ``repro.core.topdown.topdown_step``."""
+    n = g.n
+    fw = bitmap.pack(frontier)
+    vw = bitmap.pack(visited)
+    cand = topdown_scan_pallas(g.src_idx, g.col_idx, fw, vw, n,
+                               interpret=interpret_default())
+    best = jnp.full((n,), n, dtype=jnp.int32).at[g.col_idx].min(cand)
+    new = (best < n) & ~visited
+    parent = jnp.where(new, best, parent)
+    return new, visited | new, parent

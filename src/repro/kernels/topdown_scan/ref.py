@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the topdown_scan kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bitmap
+
+
+def topdown_scan_ref(src_idx, col_idx, frontier_words, visited_words, n: int):
+    active = bitmap.test(frontier_words, src_idx) & ~bitmap.test(
+        visited_words, col_idx)
+    return jnp.where(active, src_idx, n).astype(jnp.int32)

@@ -1,0 +1,92 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", ""))
+# Must precede any jax import (device count locks on first init).
+import argparse      # noqa: E402
+import json          # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.core.dist_bfs import MAX_LAYERS, _dist_bfs_impl  # noqa: E402
+from repro.launch import roofline as rl                     # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+
+"""Dry-run of the distributed hybrid BFS itself on the production meshes —
+the paper's technique at datacenter scale (Graph500 SCALE 22-26).
+
+Shapes are analytic: n padded to ndev*32 multiples; per-device edge slabs
+sized at 1.5x the mean (R-MAT skew headroom). The while loop bound is
+MAX_LAYERS=64; R-MAT diameters are ~6-8, so per-layer collective costs are
+reported as total/64 alongside the loop-bound totals.
+"""
+
+
+def bfs_cell(scale: int, edgefactor: int, multi_pod: bool) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ndev = int(np.prod(mesh.devices.shape))
+    n_orig = 1 << scale
+    m_directed = n_orig * edgefactor * 2            # symmetrised
+    block = -(-n_orig // (ndev * 32)) * 32
+    n = block * ndev
+    m_loc = int(np.ceil(m_directed / ndev * 1.5))
+
+    args = (
+        jax.ShapeDtypeStruct((ndev, block + 1), jnp.int32),   # row_ptr
+        jax.ShapeDtypeStruct((ndev, m_loc), jnp.int32),       # col_idx
+        jax.ShapeDtypeStruct((ndev, m_loc), jnp.int32),       # src_loc
+        jax.ShapeDtypeStruct((ndev, block), jnp.int32),       # deg
+        jax.ShapeDtypeStruct((), jnp.int32),                  # root
+    )
+    kw = dict(mesh=mesh, mode="hybrid", alpha=14.0, beta=24.0, max_pos=8,
+              n=n, n_loc=block, m_loc=m_loc, n_orig=n_orig)
+    lowered = jax.jit(
+        lambda *a: _dist_bfs_impl(*a, **kw)).lower(*args)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = rl.parse_collectives(hlo, ndev)
+    hbm = rl.parse_hbm_bytes(hlo)
+    cost = compiled.cost_analysis()
+    rec = dict(
+        kind="dist_bfs", scale=scale, edgefactor=edgefactor,
+        mesh="pod2x16x16" if multi_pod else "pod16x16", n_devices=ndev,
+        n=n, m_loc=m_loc, status="ok",
+        flops_per_device=float(cost.get("flops", 0.0)),
+        hbm_bytes_per_device=hbm,
+        collective=dict(wire_bytes_per_device=coll.wire_bytes,
+                        per_layer_wire_bytes=coll.wire_bytes / MAX_LAYERS,
+                        num_collectives=coll.count, by_op=coll.by_op),
+        memory=dict(
+            argument_bytes=int(mem.argument_size_in_bytes),
+            temp_bytes=int(mem.temp_size_in_bytes),
+            output_bytes=int(mem.output_size_in_bytes)),
+        roofline=rl.roofline_terms(float(cost.get("flops", 0.0)), hbm,
+                                   coll.wire_bytes),
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=22)
+    ap.add_argument("--edgefactor", type=int, default=16)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    for mp in (False, True):
+        rec = bfs_cell(args.scale, args.edgefactor, mp)
+        tag = (f"bfs-graph500__scale{args.scale}_ef{args.edgefactor}"
+               f"__{rec['mesh']}")
+        (out / f"{tag}.json").write_text(json.dumps(rec, indent=2))
+        t = rec["roofline"]
+        print(f"[ok] {tag} mem_temp={rec['memory']['temp_bytes'] / 1e9:.2f}GB"
+              f" wire/layer={rec['collective']['per_layer_wire_bytes'] / 1e6:.1f}MB"
+              f" dom={t['dominant']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", ""))
+# The two lines above MUST run before any jax import (device count locks on
+# first backend init). Everything else follows.
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs.base import (get_arch, input_specs, list_archs,  # noqa: E402
+                                make_step, step_arg_specs)
+from repro.distributed.sharding import tree_shardings  # noqa: E402
+from repro.launch.mesh import make_production_mesh     # noqa: E402
+from repro.launch import roofline as rl                # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), record memory/cost/collective
+analysis to artifacts/dryrun/*.json — the §Dry-run / §Roofline source data.
+
+Usage:
+  python -m repro.launch.dryrun --arch phi4-mini-3.8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+"""
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "pod16x16"
+
+
+def dryrun_cell(arch_id: str, shape_id: str, multi_pod: bool,
+                donate: bool = True) -> dict:
+    arch = get_arch(arch_id)
+    shape = arch.shape(shape_id)
+    rec = dict(arch=arch_id, shape=shape_id, mesh=_mesh_tag(multi_pod),
+               kind=shape.kind)
+    if shape.skip_reason:
+        rec.update(status="skipped", skip_reason=shape.skip_reason)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+    args_shapes, args_specs = step_arg_specs(arch, shape)
+    in_shardings = tree_shardings(args_shapes, args_specs, mesh)
+    step = make_step(arch, shape)
+    if not donate:
+        donate_argnums = ()
+    elif shape.kind == "train":
+        donate_argnums = (0, 1)        # params + opt state
+    elif shape.kind == "decode":
+        donate_argnums = (1,)          # KV cache buffers update in place
+    else:
+        donate_argnums = ()
+
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(step, in_shardings=in_shardings,
+                         donate_argnums=donate_argnums)
+        lowered = jitted.lower(*args_shapes)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    coll = rl.parse_collectives(hlo, n_dev)
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    hbm_bytes = rl.parse_hbm_bytes(hlo)
+    from repro.launch.flops import analytic_flops
+    an = analytic_flops(arch, shape)
+    # cost_analysis counts scan bodies once -> use the analytic executed
+    # FLOPs (global / n_dev) for the compute term; the memory term comes from
+    # the loop-weighted HLO traffic parse (see roofline.py + EXPERIMENTS).
+    exec_per_dev = an["executed_flops"] / n_dev
+    terms = rl.roofline_terms(max(flops, exec_per_dev), hbm_bytes,
+                              coll.wire_bytes)
+
+    def _mem_attr(name):
+        v = getattr(mem, name, None)
+        return int(v) if v is not None else None
+
+    rec.update(
+        status="ok", n_devices=n_dev,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        flops_per_device=flops, cost_bytes_accessed=bytes_acc,
+        hbm_bytes_per_device=hbm_bytes,
+        model_flops_global=an["model_flops"],
+        executed_flops_global=an["executed_flops"],
+        model_to_hlo_ratio=(an["model_flops"] / (flops * n_dev)
+                            if flops else None),
+        collective=dict(wire_bytes_per_device=coll.wire_bytes,
+                        num_collectives=coll.count, by_op=coll.by_op),
+        memory=dict(
+            argument_bytes=_mem_attr("argument_size_in_bytes"),
+            output_bytes=_mem_attr("output_size_in_bytes"),
+            temp_bytes=_mem_attr("temp_size_in_bytes"),
+            generated_code_bytes=_mem_attr("generated_code_size_in_bytes"),
+            alias_bytes=_mem_attr("alias_size_in_bytes"),
+        ),
+        roofline=terms,
+        hlo_bytes=len(hlo),
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-donate", action="store_true")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in get_arch(a).shapes:
+                cells.append((a, s.shape_id))
+    else:
+        arch = get_arch(args.arch)
+        shapes = ([args.shape] if args.shape
+                  else [s.shape_id for s in arch.shapes])
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    failures = 0
+    for arch_id, shape_id in cells:
+        for mp in meshes:
+            tag = f"{arch_id}__{shape_id}__{_mesh_tag(mp)}"
+            path = out / f"{tag}.json"
+            try:
+                rec = dryrun_cell(arch_id, shape_id, mp,
+                                  donate=not args.no_donate)
+            except Exception as e:  # a failing cell is a bug — record it
+                rec = dict(arch=arch_id, shape=shape_id, mesh=_mesh_tag(mp),
+                           status="error", error=repr(e),
+                           traceback=traceback.format_exc())
+                failures += 1
+            path.write_text(json.dumps(rec, indent=2, default=str))
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f" compile={rec['compile_s']}s"
+                         f" dom={r['dominant']}"
+                         f" frac={r['roofline_fraction']:.3f}")
+            elif status == "error":
+                extra = " " + rec["error"][:120]
+            print(f"[{status:7s}] {tag}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

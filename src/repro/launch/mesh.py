@@ -1,0 +1,26 @@
+"""Mesh construction. Importing this module never touches jax device state —
+everything is behind functions (dry-run sets XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The production mesh: 16x16 (one v5e pod) or 2x16x16 (two pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (tests / elastic re-mesh use this)."""
+    return jax.make_mesh(shape, axes)
+
+
+def host_device_mesh(model_parallel: int = 1):
+    """Best-effort mesh over whatever devices exist (CPU smoke: 1 device)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

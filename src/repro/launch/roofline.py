@@ -1,0 +1,286 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+  compute    = model_flops_per_chip / 197e12 bf16 FLOP/s
+  memory     = hbm_bytes_per_chip   / 819e9  B/s
+  collective = wire_bytes_per_chip  / 50e9   B/s per ICI link
+
+``cost_analysis()`` supplies FLOPs / bytes for the *per-device* partitioned
+module. Collective bytes are NOT in cost_analysis: we parse the post-SPMD
+HLO text and sum per-op wire traffic with ring-algorithm estimates:
+
+  all-gather       R*(k-1)/k      (R = result bytes, k = group size)
+  all-reduce       2*R*(k-1)/k
+  reduce-scatter   R*(k-1)        (result is the per-shard output)
+  all-to-all       R*(k-1)/k
+  collective-permute  R
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of one HLO (possibly tuple) type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0                 # per-device, ring estimate
+    result_bytes: float = 0.0
+    count: int = 0
+    by_op: dict = field(default_factory=dict)
+
+    def add(self, op: str, wire: float, result: float):
+        self.wire_bytes += wire
+        self.result_bytes += result
+        self.count += 1
+        d = self.by_op.setdefault(op, dict(wire_bytes=0.0, count=0))
+        d["wire_bytes"] += wire
+        d["count"] += 1
+
+
+_COMP_HEADER_RE = re.compile(
+    r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{")  # args may nest parens
+_WHILE_RE = re.compile(r"while\(.*?\)[^\n]*?condition=%?([\w.\-]+)[^\n]*?"
+                       r"body=%?([\w.\-]+)")
+_WHILE_RE2 = re.compile(r"while\(.*?\)[^\n]*?body=%?([\w.\-]+)[^\n]*?"
+                        r"condition=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+_CONST_DEF_RE = re.compile(
+    r"%?([\w.\-]+)\s*=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+_COMPARE_RE = re.compile(r"compare\(([^)]*)\)[^\n]*direction=(LT|LE|GT|GE)")
+
+
+def _split_computations(hlo_text: str):
+    """name -> (body_text, is_entry). Robust line scanner over HLO text."""
+    comps: dict[str, str] = {}
+    entry = None
+    name, buf = None, []
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m and ("->" in line):
+            if name is not None:
+                comps[name] = "\n".join(buf)
+            name = m.group(2)
+            if m.group(1):
+                entry = name
+            buf = [line]
+        elif name is not None:
+            buf.append(line)
+    if name is not None:
+        comps[name] = "\n".join(buf)
+    return comps, entry
+
+
+def _trip_count(cond_text: str) -> int:
+    """Loop bound of a counted while: resolve the constant operand of the
+    condition's compare instruction (not just any constant in the
+    computation — conditions can embed unrelated literals)."""
+    consts = {m.group(1): int(m.group(2))
+              for m in _CONST_DEF_RE.finditer(cond_text)}
+    for m in _COMPARE_RE.finditer(cond_text):
+        for o in _OPERAND_RE.findall(m.group(1)):
+            if o in consts:
+                return max(1, consts[o])
+    vals = list(consts.values())
+    return max(vals) if vals else 1
+
+
+def _loop_multipliers(comps: dict[str, str], entry: str) -> dict[str, float]:
+    """Execution count per computation, walking while-loops from ENTRY.
+
+    cost_analysis / naive text scans count a scan body ONCE; this recovers
+    the trip counts so per-layer / per-microbatch collectives are weighted
+    correctly (DESIGN §6)."""
+    mult = {c: 0.0 for c in comps}
+    if entry not in comps:
+        entry = next(iter(comps), None)
+        if entry is None:
+            return mult
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    while order:
+        cur = order.pop(0)
+        text = comps.get(cur, "")
+        whiles = list(_WHILE_RE.finditer(text)) or []
+        pairs = [(m.group(1), m.group(2)) for m in whiles]
+        for m in _WHILE_RE2.finditer(text):
+            pairs.append((m.group(2), m.group(1)))
+        for cond, body in set(pairs):
+            trips = _trip_count(comps.get(cond, ""))
+            if body in comps:
+                mult[body] = mult.get(body, 0.0) + mult[cur] * trips
+                if body not in seen:
+                    seen.add(body)
+                    order.append(body)
+    # computations never reached via a while (fusions, branches) execute with
+    # their caller: give them the entry multiplier so their collectives count
+    for c in comps:
+        if mult.get(c, 0.0) == 0.0:
+            mult[c] = 1.0
+    return mult
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    comps, entry = _split_computations(hlo_text)
+    if not comps:
+        comps, entry = {"__all__": hlo_text}, "__all__"
+    mult = _loop_multipliers(comps, entry)
+    for cname, text in comps.items():
+        weight = mult.get(cname, 1.0)
+        for line in text.splitlines():
+            stripped = line.strip()
+            op = next((c for c in _COLLECTIVES
+                       if f" {c}(" in stripped or f"{c}-start(" in stripped),
+                      None)
+            if op is None:
+                continue
+            lhs = stripped.split(" = ", 1)
+            if len(lhs) != 2:
+                continue
+            type_part = lhs[1].split(op)[0]
+            r = _type_bytes(type_part)
+            if r == 0:
+                continue
+            k = _group_size(stripped, n_devices)
+            if op == "all-gather":
+                wire = r * (k - 1) / max(k, 1)
+            elif op == "all-reduce":
+                wire = 2 * r * (k - 1) / max(k, 1)
+            elif op == "reduce-scatter":
+                wire = r * (k - 1)
+            elif op == "all-to-all":
+                wire = r * (k - 1) / max(k, 1)
+            else:  # collective-permute
+                wire = r
+            stats.add(op, wire * weight, r)
+    return stats
+
+
+_NO_WRITE_OPS = (" parameter(", " constant(", " get-tuple-element(",
+                 " tuple(", " bitcast(", " while(", " conditional(",
+                 "-done(", " iota(", " after-all(", " copy-start(")
+_INSTR_RE = re.compile(r"^\s*(ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.+)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_OPNAME_RE = re.compile(r"\s([a-z][\w\-]*)\(")
+
+
+def parse_hbm_bytes(hlo_text: str) -> float:
+    """HBM traffic estimate from optimized post-fusion HLO, weighted by loop
+    trip counts (cost_analysis counts scan bodies once).
+
+    Model: every instruction writes its result (result bytes) and reads its
+    operands (looked up in a per-computation symbol table — covers values
+    arriving via parameter/get-tuple-element, e.g. the KV cache inside a
+    layer scan). dynamic-update-slice is in-place on TPU: it writes/reads
+    only the update slice. Zero-cost view/control ops write nothing.
+    Fusion-internal values never appear (post-fusion HLO), so this tracks
+    the values that actually round-trip HBM.
+    """
+    comps, entry = _split_computations(hlo_text)
+    if not comps:
+        return 0.0
+    mult = _loop_multipliers(comps, entry)
+    total = 0.0
+    for cname, text in comps.items():
+        weight = mult.get(cname, 1.0)
+        # symbol table: value name -> bytes
+        table: dict[str, int] = {}
+        lines = text.splitlines()
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            rhs = m.group(3)
+            opm = _OPNAME_RE.search(" " + rhs)
+            if not opm:
+                continue
+            type_part = rhs[:opm.start()]
+            table[m.group(2).lstrip("%")] = _type_bytes(type_part)
+        comp_bytes = 0.0
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            rhs = " " + m.group(3)
+            opm = _OPNAME_RE.search(rhs)
+            if not opm:
+                continue
+            opname = opm.group(1)
+            name = m.group(2).lstrip("%")
+            args_part = rhs[opm.end():].split("),")[0]
+            operands = [o for o in _OPERAND_RE.findall(args_part)
+                        if o in table]
+            if opname == "dynamic-update-slice":
+                # in-place: traffic = update slice rw (2nd operand)
+                upd = operands[1] if len(operands) > 1 else None
+                comp_bytes += 2 * table.get(upd, 0)
+                continue
+            if any(s in f" {opname}(" for s in _NO_WRITE_OPS):
+                continue
+            comp_bytes += table.get(name, 0)                  # write result
+            comp_bytes += sum(table[o] for o in operands)     # read operands
+        total += comp_bytes * weight
+    return total
+
+
+def roofline_terms(flops_per_dev: float, hbm_bytes_per_dev: float,
+                   wire_bytes_per_dev: float) -> dict:
+    compute = flops_per_dev / PEAK_FLOPS
+    memory = hbm_bytes_per_dev / HBM_BW
+    collective = wire_bytes_per_dev / ICI_BW
+    terms = dict(compute_s=compute, memory_s=memory, collective_s=collective)
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms.update(
+        dominant=dom.replace("_s", ""),
+        step_time_bound_s=bound,
+        # fraction of the bound that is useful compute = roofline fraction
+        roofline_fraction=(compute / bound) if bound > 0 else 0.0,
+    )
+    return terms

@@ -1,0 +1,45 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gcn-cora --reduced \
+      --steps 50 --ckpt-dir /tmp/ckpt
+
+``--reduced`` runs the CPU-scale config (what the container can execute);
+without it the full config is used — appropriate on a real TPU slice, where
+``--model-parallel`` picks the mesh split. BFS training has no meaning; see
+``repro.launch.bfs`` for the Graph500 entry point.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.base import get_arch, list_archs
+from repro.configs.reduced import reduce_arch
+from repro.launch.mesh import host_device_mesh
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--shape", default=None,
+                    help="train shape id (default: first train shape)")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    arch = reduce_arch(args.arch) if args.reduced else get_arch(args.arch)
+    shape_id = args.shape or next(s.shape_id for s in arch.shapes
+                                  if s.kind == "train")
+    mesh = host_device_mesh(args.model_parallel)
+    trainer = Trainer(arch, shape_id, mesh=mesh, cfg=TrainerConfig(
+        steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir, seed=args.seed))
+    trainer.run()
+
+
+if __name__ == "__main__":
+    main()

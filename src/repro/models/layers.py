@@ -1,0 +1,278 @@
+"""Shared functional layers: norms, RoPE, GQA attention, SwiGLU MLP.
+
+Pure functions over parameter pytrees; no framework. Every init function
+returns ``(params, specs)`` where ``specs`` mirrors ``params`` with tuples of
+*logical* axis names consumed by ``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------- init utils
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense(key, d_in, d_out, dtype, logical=("embed", "mlp"), bias=False):
+    params = {"w": _dense_init(key, (d_in, d_out), dtype)}
+    specs = {"w": logical}
+    if bias:
+        params["b"] = jnp.zeros((d_out,), dtype)
+        specs["b"] = (logical[-1],)
+    return params, specs
+
+
+def apply_dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# --------------------------------------------------------------------- norms
+
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d, dtype):
+    return ({"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": ("embed",), "bias": ("embed",)})
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: [..., seq, heads, d_head]; positions: [..., seq] int32."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                       # [d_head/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [..., seq, dh/2]
+    cos = jnp.cos(ang)[..., None, :]                         # [..., seq, 1, dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+
+def gqa_attention(q, k, v, *, causal: bool, q_offset=0, kv_len_mask=None,
+                  seq_pin: bool = True):
+    """Grouped-query attention.
+
+    q: [B, Sq, Hq, Dh]; k,v: [B, Skv, Hkv, Dh]; Hq = G * Hkv.
+    ``q_offset``: absolute position of q[0] (decode: Skv_filled).
+    ``kv_len_mask``: optional bool[B, Skv] of valid cache slots.
+    Returns [B, Sq, Hq, Dh].
+
+    The grouped-query GROUP dim is pinned to the model axis (when it
+    divides): without this GSPMD flip-flops layouts between the two dots
+    and inserts "involuntary full rematerialization" copies + replicated
+    score tensors (observed on llama3-405b + sequence-parallel residuals,
+    EXPERIMENTS §Perf P1.6).
+    """
+    from repro.distributed.sharding import ambient_axes_size, constrain
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    # Pin the layout GSPMD should keep through both dots: the group dim when
+    # it divides the model axis, else the q-seq dim (phi4's g=3 / qwen1.5's
+    # g=1 can't head-shard; without a pin the scores replicate per device).
+    # A *partial* pin on an indivisible dim would force de-sharding — hence
+    # the divisibility guards.
+    msize = ambient_axes_size(("model",))
+    pin_heads = msize > 1 and g % msize == 0
+    pin_seq = (seq_pin and msize > 1 and not pin_heads
+               and sq % msize == 0)
+    if pin_heads:
+        qg = constrain(qg, ("batch", None, None, "heads", None))
+    elif pin_seq:
+        qg = constrain(qg, ("batch", "kv_seq", None, None, None))
+    scale = 1.0 / np.sqrt(dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if pin_heads:
+        logits = constrain(logits, ("batch", None, "heads", None, None))
+    elif pin_seq:
+        logits = constrain(logits, ("batch", None, None, "kv_seq", None))
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(k.shape[1])[None, :]
+        mask = qpos >= kpos                              # [Sq, Skv]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    if kv_len_mask is not None:
+        logits = jnp.where(kv_len_mask[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    if pin_heads:
+        out = constrain(out, ("batch", None, None, "heads", None))
+    elif pin_seq:
+        out = constrain(out, ("batch", "kv_seq", None, None, None))
+    return out.reshape(b, sq, hq, dh)
+
+
+def gqa_attention_chunked(q, k, v, *, causal: bool, q_offset=0,
+                          q_chunk: int = 2048, kv_chunk: int = 2048):
+    """Blockwise GQA attention with an online softmax (flash-attention
+    schedule at the XLA level): peak memory O(q_chunk x kv_chunk) scores
+    instead of O(Sq x Skv). Sequential scan over q blocks; inner scan over
+    kv blocks carries (running max, denominator, weighted accumulator).
+
+    Required for the 32k prefill shapes — naive attention materialises
+    ~13 GiB of scores per layer per device there (see EXPERIMENTS §Perf).
+    """
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0
+    nq, nkv = sq // q_chunk, skv // kv_chunk
+    scale = 1.0 / np.sqrt(dh)
+
+    qs = q.reshape(b, nq, q_chunk, hkv, g, dh).transpose(1, 0, 3, 4, 2, 5)
+    # qs: [nq, b, hkv, g, qc, dh]
+
+    def one_q_block(args):
+        qb, iq = args                       # [b, hkv, g, qc, dh], scalar
+
+        def kv_body(carry, j):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, j * kv_chunk, kv_chunk, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, j * kv_chunk, kv_chunk, 1)
+            s = jnp.einsum("bhgqd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = iq * q_chunk + jnp.arange(q_chunk) + q_offset
+                kpos = j * kv_chunk + jnp.arange(kv_chunk)
+                s = jnp.where((qpos[:, None] >= kpos[None, :]
+                               )[None, None, None], s, -1e30)
+            m2 = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m2[..., None])
+            corr = jnp.exp(m - m2)
+            l2 = l * corr + p.sum(-1)
+            acc2 = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(q.dtype), vb).astype(jnp.float32)
+            return (m2, l2, acc2), None
+
+        init = (jnp.full((b, hkv, g, q_chunk), -1e30, jnp.float32),
+                jnp.zeros((b, hkv, g, q_chunk), jnp.float32),
+                jnp.zeros((b, hkv, g, q_chunk, dh), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_body, init,
+                                      jnp.arange(nkv, dtype=jnp.int32))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)           # [b, hkv, g, qc, dh]
+
+    outs = jax.lax.map(one_q_block, (qs, jnp.arange(nq, dtype=jnp.int32)))
+    # outs: [nq, b, hkv, g, qc, dh] -> [b, sq, hq, dh]
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, hq, dh)
+
+
+ATTN_CHUNK_THRESHOLD = 8192   # use the blockwise path beyond this q length
+
+
+def attention_init(key, d_model, n_heads, n_kv, d_head, dtype,
+                   qkv_bias=False):
+    ks = jax.random.split(key, 4)
+    params, specs = {}, {}
+    params["wq"], specs["wq"] = dense(ks[0], d_model, n_heads * d_head, dtype,
+                                      ("embed", "heads"), qkv_bias)
+    params["wk"], specs["wk"] = dense(ks[1], d_model, n_kv * d_head, dtype,
+                                      ("embed", "kv"), qkv_bias)
+    params["wv"], specs["wv"] = dense(ks[2], d_model, n_kv * d_head, dtype,
+                                      ("embed", "kv"), qkv_bias)
+    params["wo"], specs["wo"] = dense(ks[3], n_heads * d_head, d_model, dtype,
+                                      ("heads", "embed"))
+    return params, specs
+
+
+# --------------------------------------------------------------- SwiGLU MLP
+
+
+def swiglu_init(key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 3)
+    params, specs = {}, {}
+    params["w1"], specs["w1"] = dense(ks[0], d_model, d_ff, dtype,
+                                      ("embed", "mlp"))
+    params["w3"], specs["w3"] = dense(ks[1], d_model, d_ff, dtype,
+                                      ("embed", "mlp"))
+    params["w2"], specs["w2"] = dense(ks[2], d_ff, d_model, dtype,
+                                      ("mlp", "embed"))
+    return params, specs
+
+
+def swiglu(p, x):
+    return (jax.nn.silu(x @ p["w1"]["w"]) * (x @ p["w3"]["w"])) @ p["w2"]["w"]
+
+
+def mlp_init(key, sizes, dtype, act="relu", logical_hidden="mlp"):
+    """Plain MLP used by GNN/recsys heads. sizes = [d0, d1, ..., dk]."""
+    ks = jax.random.split(key, len(sizes) - 1)
+    params, specs = [], []
+    for i in range(len(sizes) - 1):
+        p, s = dense(ks[i], sizes[i], sizes[i + 1], dtype,
+                     ("embed", logical_hidden) if i == 0
+                     else (logical_hidden, logical_hidden), bias=True)
+        params.append(p)
+        specs.append(s)
+    return params, specs
+
+
+_ACTS = {"relu": jax.nn.relu, "gelu": jax.nn.gelu, "silu": jax.nn.silu,
+         "tanh": jnp.tanh, "sigmoid": jax.nn.sigmoid}
+
+
+def apply_mlp(params, x, act="relu", final_act=None):
+    a = _ACTS[act]
+    for i, p in enumerate(params):
+        x = apply_dense(p, x)
+        if i < len(params) - 1:
+            x = a(x)
+        elif final_act is not None:
+            x = _ACTS[final_act](x)
+    return x
+
+
+# ------------------------------------------------------------ loss functions
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean token cross-entropy in f32. logits [..., V], labels int[...]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,215 @@
+"""DIEN (Zhou et al., arXiv:1809.03672) — Deep Interest Evolution Network.
+
+Pipeline: sparse id features -> embedding lookup (huge tables; JAX has no
+EmbeddingBag so bags are take + segment ops — the shared gather/scatter
+substrate) -> interest extraction GRU over the behaviour sequence ->
+attention vs target -> interest evolution AUGRU (attention scales the update
+gate) -> concat features -> MLP(200, 80) -> logit.
+
+Aux loss (paper §4.2): next-behaviour discrimination on GRU hidden states
+with provided negatives.
+
+Serving heads:
+  * ``dien_forward``      — CTR probability (serve_p99 / serve_bulk shapes);
+  * ``dien_retrieval``    — user vector vs N candidate item embeddings as one
+    batched matmul + top-k (retrieval_cand shape; never a loop).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: tuple = (200, 80)
+    n_items: int = 1_000_000
+    n_cats: int = 1_000
+    n_profiles: int = 100_000
+    profile_bag: int = 8          # multi-hot profile ids per user
+    use_aux_loss: bool = True
+    dtype: str = "float32"
+
+    @property
+    def behav_dim(self) -> int:
+        return 2 * self.embed_dim  # item ++ category
+
+
+def _gru_init(key, d_in, d_h):
+    ks = jax.random.split(key, 3)
+    s = 1.0 / jnp.sqrt(jnp.float32(d_in + d_h))
+    return {
+        "wx": jax.random.normal(ks[0], (d_in, 3 * d_h)) * s,
+        "wh": jax.random.normal(ks[1], (d_h, 3 * d_h)) * s,
+        "b": jnp.zeros((3 * d_h,)),
+    }
+
+
+def _gru_cell(p, h, x, att=None):
+    gx = x @ p["wx"] + p["b"]
+    gh = h @ p["wh"]
+    xz, xr, xn = jnp.split(gx, 3, -1)
+    hz, hr, hn = jnp.split(gh, 3, -1)
+    z = jax.nn.sigmoid(xz + hz)
+    r = jax.nn.sigmoid(xr + hr)
+    n = jnp.tanh(xn + r * hn)
+    if att is not None:                 # AUGRU: attention scales update gate
+        z = z * att[:, None]
+    return (1.0 - z) * h + z * n
+
+
+def init_dien(key, cfg: DIENConfig):
+    ks = jax.random.split(key, 8)
+    e = cfg.embed_dim
+    params = {
+        "item_table": jax.random.normal(ks[0], (cfg.n_items, e)) * 0.05,
+        "cat_table": jax.random.normal(ks[1], (cfg.n_cats, e)) * 0.05,
+        "profile_table": jax.random.normal(ks[2], (cfg.n_profiles, e)) * 0.05,
+        "gru": _gru_init(ks[3], cfg.behav_dim, cfg.gru_dim),
+        "augru": _gru_init(ks[4], cfg.behav_dim, cfg.gru_dim),
+        "att": L.mlp_init(ks[5], [cfg.gru_dim + cfg.behav_dim, 36, 1],
+                          jnp.float32)[0],
+        "mlp": L.mlp_init(ks[6], [cfg.gru_dim + 2 * cfg.behav_dim + e,
+                                  *cfg.mlp_dims, 1], jnp.float32)[0],
+        "user_proj": L.dense(ks[7], cfg.gru_dim, e, jnp.float32,
+                             (None, "embed"))[0],
+    }
+    specs = {
+        "item_table": ("vocab", "embed"),
+        "cat_table": (None, "embed"),
+        "profile_table": ("vocab", "embed"),
+        "gru": {"wx": (None, "mlp"), "wh": (None, "mlp"), "b": ("mlp",)},
+        "augru": {"wx": (None, "mlp"), "wh": (None, "mlp"), "b": ("mlp",)},
+        "att": [{"w": (None, None), "b": (None,)},
+                {"w": (None, None), "b": (None,)}],
+        "mlp": [{"w": (None, "mlp"), "b": ("mlp",)},
+                {"w": ("mlp", "mlp"), "b": ("mlp",)},
+                {"w": ("mlp", None), "b": (None,)}],
+        "user_proj": {"w": (None, "embed")},
+    }
+    return params, specs
+
+
+def embedding_bag(table, ids, mask, op: str = "mean"):
+    """ids int32[B, M], mask bool[B, M] -> [B, e]. take + masked reduce —
+    the manual EmbeddingBag (no native op in JAX)."""
+    rows = table[ids]                                   # [B, M, e]
+    rows = jnp.where(mask[..., None], rows, 0.0)
+    s = rows.sum(axis=1)
+    if op == "sum":
+        return s
+    return s / jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+
+
+def _behaviour_embed(params, items, cats):
+    return jnp.concatenate([params["item_table"][items],
+                            params["cat_table"][cats]], axis=-1)
+
+
+def _interest_states(params, behav, mask, cfg: DIENConfig):
+    """GRU over time: behav [B, T, 2e] -> states [B, T, H]."""
+    b = behav.shape[0]
+    h0 = jnp.zeros((b, cfg.gru_dim), behav.dtype)
+
+    def step(h, xs):
+        x, m = xs
+        h2 = _gru_cell(params["gru"], h, x)
+        h2 = jnp.where(m[:, None], h2, h)
+        return h2, h2
+
+    xs = (jnp.swapaxes(behav, 0, 1), jnp.swapaxes(mask, 0, 1))
+    _, states = jax.lax.scan(step, h0, xs)
+    return jnp.swapaxes(states, 0, 1)                   # [B, T, H]
+
+
+def _evolution(params, states, behav, target, mask, cfg: DIENConfig):
+    """Attention vs target + AUGRU roll. Returns final interest [B, H]."""
+    b, t, _ = states.shape
+    tgt = jnp.broadcast_to(target[:, None, :], (b, t, target.shape[-1]))
+    att_in = jnp.concatenate([states, tgt], axis=-1)
+    scores = L.apply_mlp(params["att"], att_in, act="sigmoid")[..., 0]
+    scores = jnp.where(mask, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=1)                # [B, T]
+
+    h0 = jnp.zeros((b, cfg.gru_dim), states.dtype)
+
+    def step(h, xs):
+        x, a, m = xs
+        h2 = _gru_cell(params["augru"], h, x, att=a)
+        h2 = jnp.where(m[:, None], h2, h)
+        return h2, None
+
+    xs = (jnp.swapaxes(behav, 0, 1), jnp.swapaxes(att, 0, 1),
+          jnp.swapaxes(mask, 0, 1))
+    hT, _ = jax.lax.scan(step, h0, xs)
+    return hT
+
+
+def dien_user_state(params, batch, cfg: DIENConfig):
+    """Shared trunk -> (final interest [B,H], feature vector [B,F])."""
+    behav = _behaviour_embed(params, batch["hist_items"], batch["hist_cats"])
+    mask = batch["hist_mask"]
+    states = _interest_states(params, behav, mask, cfg)
+    target = _behaviour_embed(params, batch["target_item"],
+                              batch["target_cat"])
+    hT = _evolution(params, states, behav, target, mask, cfg)
+    pooled = jnp.where(mask[..., None], behav, 0.0).sum(1) / jnp.maximum(
+        mask.sum(1, keepdims=True), 1.0)
+    profile = embedding_bag(params["profile_table"], batch["profile_ids"],
+                            batch["profile_mask"])
+    feats = jnp.concatenate([hT, target, pooled, profile], axis=-1)
+    return hT, states, behav, feats
+
+
+def dien_forward(params, batch, cfg: DIENConfig):
+    """CTR logit [B]."""
+    _, _, _, feats = dien_user_state(params, batch, cfg)
+    return L.apply_mlp(params["mlp"], feats, act="relu")[:, 0]
+
+
+def _aux_loss(params, states, batch, cfg: DIENConfig):
+    """Next-behaviour discrimination: sigma(h_t . e_{t+1}) vs negatives."""
+    pos = _behaviour_embed(params, batch["hist_items"], batch["hist_cats"])
+    neg = _behaviour_embed(params, batch["neg_items"], batch["hist_cats"])
+    h = states[:, :-1]                                   # [B, T-1, H]
+    proj = L.apply_dense(params["user_proj"], h)         # [B, T-1, e]
+    # score against item part of next behaviour embedding
+    pos_it = pos[:, 1:, :cfg.embed_dim]
+    neg_it = neg[:, 1:, :cfg.embed_dim]
+    m = batch["hist_mask"][:, 1:].astype(jnp.float32)
+    lp = jax.nn.log_sigmoid(jnp.sum(proj * pos_it, -1))
+    ln = jax.nn.log_sigmoid(-jnp.sum(proj * neg_it, -1))
+    return -jnp.sum((lp + ln) * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def dien_loss(params, batch, cfg: DIENConfig):
+    hT, states, behav, feats = dien_user_state(params, batch, cfg)
+    logit = L.apply_mlp(params["mlp"], feats, act="relu")[:, 0]
+    y = batch["labels"].astype(jnp.float32)
+    bce = -jnp.mean(y * jax.nn.log_sigmoid(logit)
+                    + (1 - y) * jax.nn.log_sigmoid(-logit))
+    aux = (_aux_loss(params, states, batch, cfg)
+           if cfg.use_aux_loss and "neg_items" in batch else 0.0)
+    return bce + 0.5 * aux, {"bce": bce, "aux": aux}
+
+
+def dien_retrieval(params, batch, cfg: DIENConfig, top_k: int = 100):
+    """Score one/few users against n_candidates items: batched matmul.
+
+    batch['candidate_ids'] int32[Nc] — rows of the item table to score.
+    Returns (scores [B, Nc], top-k ids [B, k]).
+    """
+    hT, _, _, _ = dien_user_state(params, batch, cfg)
+    user_vec = L.apply_dense(params["user_proj"], hT)    # [B, e]
+    cand = params["item_table"][batch["candidate_ids"]]  # [Nc, e]
+    scores = user_vec @ cand.T                           # [B, Nc]
+    _, top = jax.lax.top_k(scores, top_k)
+    return scores, top

@@ -1,0 +1,306 @@
+"""Decoder-only transformer (dense + MoE) with train / prefill / decode paths.
+
+Design points:
+  * layer stack via ``lax.scan`` over stacked per-layer params — keeps HLO
+    size O(1) in depth (essential for the 126-layer llama3-405b dry-run);
+  * GQA + RoPE + SwiGLU (or MoE FFN) + RMSNorm, optional QKV bias (qwen1.5);
+  * serve path: ``prefill`` builds the KV cache, ``decode_step`` appends one
+    token (the decode_* / long_* dry-run shapes lower decode_step);
+  * every init returns (params, specs) — specs carry logical axis names
+    ('embed', 'heads', 'kv', 'mlp', 'vocab', 'experts') resolved to mesh
+    axes by repro.distributed.sharding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.moe import MoEConfig, moe_ffn, moe_init
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 500000.0
+    qkv_bias: bool = False
+    moe: MoEConfig | None = None
+    dtype: str = "float32"
+    param_dtype: str = "float32"
+    remat: bool = True
+    # Megatron-style sequence-parallel residual stream: the layer-scan carry
+    # is stored seq-sharded over the model axis (16x less carry memory at
+    # the cost of one all-gather per layer) — required for llama3-405b train.
+    seq_parallel_residual: bool = False
+    # KV cache storage dtype (serving): fp8 halves cache HBM — required for
+    # MHA archs at 32k x 128 (qwen1.5's cache is 5.5 TB in bf16).
+    kv_cache_dtype: str | None = None
+    # pin attention q-seq dim to the model axis when heads can't shard
+    # (helps GQA with small groups; hurts MHA — measured per arch, §Perf)
+    attn_seq_pin: bool = True
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def cache_dtype(self):
+        return jnp.dtype(self.kv_cache_dtype or self.dtype)
+
+    def param_count(self) -> int:
+        d, v = self.d_model, self.vocab
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head \
+            + self.n_heads * self.d_head * d
+        if self.moe is not None:
+            ffn = self.moe.num_experts * 3 * d * self.moe.d_ff_expert \
+                + d * self.moe.num_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        return self.n_layers * (attn + ffn + 2 * d) + 2 * v * d + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts) — for 6*N*D FLOPs."""
+        d, v = self.d_model, self.vocab
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head \
+            + self.n_heads * self.d_head * d
+        if self.moe is not None:
+            ffn = self.moe.top_k * 3 * d * self.moe.d_ff_expert \
+                + d * self.moe.num_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        return self.n_layers * (attn + ffn + 2 * d) + 2 * v * d + d
+
+
+# ------------------------------------------------------------------- init
+
+
+def _layer_init(key, cfg: LMConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    params, specs = {}, {}
+    params["ln1"], specs["ln1"] = L.rmsnorm_init(cfg.d_model, pdt)
+    params["ln2"], specs["ln2"] = L.rmsnorm_init(cfg.d_model, pdt)
+    params["attn"], specs["attn"] = L.attention_init(
+        ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, pdt,
+        qkv_bias=cfg.qkv_bias)
+    if cfg.moe is not None:
+        params["moe"], specs["moe"] = moe_init(ks[1], cfg.d_model, cfg.moe, pdt)
+    else:
+        params["mlp"], specs["mlp"] = L.swiglu_init(ks[1], cfg.d_model,
+                                                    cfg.d_ff, pdt)
+    return params, specs
+
+
+def init_lm(key, cfg: LMConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _layer_init(k, cfg)[0])(layer_keys)
+    spec_box = {}
+
+    def _one(k):  # specs are static python data — capture via side channel
+        p, s = _layer_init(k, cfg)
+        spec_box["s"] = s
+        return p
+
+    jax.eval_shape(_one, jax.random.PRNGKey(0))
+    layer_specs = jax.tree.map(lambda s: (None,) + tuple(s), spec_box["s"],
+                               is_leaf=lambda x: isinstance(x, tuple))
+    params = {
+        "embed": L._dense_init(k_emb, (cfg.vocab, cfg.d_model), pdt, scale=0.02),
+        "layers": stacked,
+        "ln_f": L.rmsnorm_init(cfg.d_model, pdt)[0],
+        "head": L._dense_init(k_head, (cfg.d_model, cfg.vocab), pdt),
+    }
+    specs = {
+        "embed": ("vocab", "embed"),
+        "layers": layer_specs,
+        "ln_f": L.rmsnorm_init(cfg.d_model, pdt)[1],
+        "head": ("embed", "vocab"),
+    }
+    return params, specs
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _ffn(lp, x2, cfg: LMConfig):
+    if cfg.moe is not None:
+        b, s, d = x2.shape
+        y, aux = moe_ffn(lp["moe"], x2.reshape(b * s, d), cfg.moe)
+        return y.reshape(b, s, d), aux
+    return L.swiglu(lp["mlp"], x2), jnp.float32(0.0)
+
+
+def _attn(lp, x1, cfg: LMConfig, positions, kv=None, kv_len_mask=None,
+          q_offset=0, return_kv=False):
+    b, s, _ = x1.shape
+    q = L.apply_dense(lp["attn"]["wq"], x1).reshape(b, s, cfg.n_heads,
+                                                    cfg.d_head)
+    k = L.apply_dense(lp["attn"]["wk"], x1).reshape(b, s, cfg.n_kv_heads,
+                                                    cfg.d_head)
+    v = L.apply_dense(lp["attn"]["wv"], x1).reshape(b, s, cfg.n_kv_heads,
+                                                    cfg.d_head)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if kv is None:
+        if s > L.ATTN_CHUNK_THRESHOLD:
+            o = L.gqa_attention_chunked(q, k, v, causal=True)
+        else:
+            o = L.gqa_attention(q, k, v, causal=True,
+                                seq_pin=cfg.attn_seq_pin)
+        new_kv = (k, v) if return_kv else None
+    else:
+        o = L.gqa_attention(q, kv[0], kv[1], causal=False,
+                            kv_len_mask=kv_len_mask,
+                            seq_pin=cfg.attn_seq_pin)
+        new_kv = None
+    o = L.apply_dense(lp["attn"]["wo"], o.reshape(b, s, -1))
+    return o, new_kv
+
+
+def _block_train(cfg: LMConfig):
+    def body(x, lp):
+        if cfg.seq_parallel_residual:
+            # Megatron-SP: the scan carry (what backward saves per layer) is
+            # the body INPUT — constrain it here so the saved buffer is
+            # seq-sharded over 'model', and again on the output so the
+            # constraint holds at both ends of every layer.
+            x = constrain(x, ("batch", "kv_seq", None))
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+        x1 = L.rmsnorm(lp["ln1"], x)
+        if cfg.seq_parallel_residual:
+            # Megatron-SP exchange: all-gather the (small) activations to
+            # full seq before the projections, so GSPMD keeps the (huge)
+            # weights model-sharded instead of gathering them per layer.
+            x1 = constrain(x1, ("batch", None, None))
+        a, _ = _attn(lp, x1, cfg, positions)
+        x = x + a
+        x2 = L.rmsnorm(lp["ln2"], x)
+        if cfg.seq_parallel_residual:
+            x2 = constrain(x2, ("batch", None, None))
+        f, aux = _ffn(lp, x2, cfg)
+        x = x + f
+        if cfg.seq_parallel_residual:
+            x = constrain(x, ("batch", "kv_seq", None))
+        return x, aux
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    return body
+
+
+def lm_forward(params, tokens, cfg: LMConfig):
+    """tokens int32[B, S] -> (logits [B, S, V], aux_loss)."""
+    adt = cfg.activation_dtype
+    x = params["embed"][tokens].astype(adt)
+    x = constrain(x, ("batch", None, None))
+    body = _block_train(cfg)
+    x, auxs = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["ln_f"], x)
+    logits = x @ params["head"].astype(adt)
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits, jnp.sum(auxs)
+
+
+def lm_loss(params, batch, cfg: LMConfig):
+    logits, aux = lm_forward(params, batch["tokens"], cfg)
+    loss = L.softmax_xent(logits[:, :-1], batch["labels"][:, 1:],
+                          batch.get("mask", None))
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+# ------------------------------------------------------------------ serving
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return (jnp.zeros(shape, cfg.cache_dtype),
+            jnp.zeros(shape, cfg.cache_dtype))
+
+
+def lm_prefill(params, tokens, cfg: LMConfig):
+    """tokens int32[B, S] -> (last-token logits [B, V], cache)."""
+    adt = cfg.activation_dtype
+    x = params["embed"][tokens].astype(adt)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None]
+
+    kv_spec = ("batch", "kv_seq", "kv_heads", None)
+
+    def body(x, lp):
+        a, kv = _attn(lp, L.rmsnorm(lp["ln1"], x), cfg, positions,
+                      return_kv=True)
+        x = x + a
+        f, _ = _ffn(lp, L.rmsnorm(lp["ln2"], x), cfg)
+        # cache layers are step OUTPUTS: constrain them model-axis sharded
+        # and store in the (possibly fp8) cache dtype
+        kv = tuple(constrain(t.astype(cfg.cache_dtype), kv_spec) for t in kv)
+        return x + f, kv
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["ln_f"], x[:, -1:])
+    logits = (x @ params["head"].astype(adt))[:, 0]
+    logits = constrain(logits, ("batch", "vocab"))
+    return logits, (ks, vs)
+
+
+def lm_decode_step(params, token, cache, cache_len, cfg: LMConfig):
+    """One decode step.
+
+    token int32[B, 1]; cache ([L,B,S,KV,Dh] x2); cache_len int32 scalar —
+    number of filled slots. Returns (logits [B, V], new cache).
+    """
+    adt = cfg.activation_dtype
+    b = token.shape[0]
+    max_len = cache[0].shape[2]
+    x = params["embed"][token].astype(adt)
+    positions = jnp.full((1, 1), cache_len, jnp.int32)
+    slot_mask = jnp.broadcast_to((jnp.arange(max_len) <= cache_len)[None],
+                                 (b, max_len))
+
+    def body(x, layer_in):
+        lp, k_l, v_l = layer_in
+        x1 = L.rmsnorm(lp["ln1"], x)
+        q = L.apply_dense(lp["attn"]["wq"], x1).reshape(b, 1, cfg.n_heads,
+                                                        cfg.d_head)
+        kn = L.apply_dense(lp["attn"]["wk"], x1).reshape(b, 1, cfg.n_kv_heads,
+                                                         cfg.d_head)
+        vn = L.apply_dense(lp["attn"]["wv"], x1).reshape(b, 1, cfg.n_kv_heads,
+                                                         cfg.d_head)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        kn = L.apply_rope(kn, positions, cfg.rope_theta)
+        k_l = jax.lax.dynamic_update_slice(k_l, kn.astype(k_l.dtype),
+                                           (0, cache_len, 0, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, vn.astype(v_l.dtype),
+                                           (0, cache_len, 0, 0))
+        kv_spec = ("batch", "kv_seq", "kv_heads", None)
+        k_l = constrain(k_l, kv_spec)
+        v_l = constrain(v_l, kv_spec)
+        # fp8 cache reads are converted inside the attention dots (fused)
+        o = L.gqa_attention(q, k_l.astype(x.dtype), v_l.astype(x.dtype),
+                            causal=False, kv_len_mask=slot_mask,
+                            seq_pin=cfg.attn_seq_pin)
+        x = x + L.apply_dense(lp["attn"]["wo"], o.reshape(b, 1, -1))
+        f, _ = _ffn(lp, L.rmsnorm(lp["ln2"], x), cfg)
+        return x + f, (k_l, v_l)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"],) + cache)
+    x = L.rmsnorm(params["ln_f"], x)
+    logits = (x @ params["head"].astype(adt))[:, 0]
+    logits = constrain(logits, ("batch", "vocab"))
+    return logits, (ks, vs)

@@ -1,0 +1,127 @@
+"""Optimizers: AdamW and a factored (Adafactor-style) variant.
+
+Self-contained (no optax). Moment dtype is configurable; ``factored=True``
+replaces the full second moment with row/col statistics over the trailing
+two axes (rank>=2 tensors) — this is what lets llama3-405b optimizer state
+fit 16 GiB/chip HBM (DESIGN §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    factored: bool = False
+    # microbatch gradient-accumulation dtype; bf16 halves the two biggest
+    # training buffers (accumulator + clipped copy) for very large models
+    accum_dtype: str = "float32"
+
+    @property
+    def mdt(self):
+        return jnp.dtype(self.moment_dtype)
+
+
+def _is_factorable(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2
+
+
+def init_opt_state(params, cfg: OptConfig):
+    def one(p):
+        st = {}
+        if cfg.b1 > 0:
+            st["m"] = jnp.zeros_like(p, dtype=cfg.mdt)
+        if cfg.factored and _is_factorable(p.shape):
+            st["vr"] = jnp.zeros(p.shape[:-1], cfg.mdt)      # row stats
+            st["vc"] = jnp.zeros(p.shape[:-2] + p.shape[-1:], cfg.mdt)
+        else:
+            st["v"] = jnp.zeros_like(p, dtype=cfg.mdt)
+        return st
+    return {"step": jnp.zeros((), jnp.int32),
+            "per_param": jax.tree.map(one, params)}
+
+
+def opt_state_specs(param_specs, cfg: OptConfig, params_shapes):
+    """Logical-axis spec tree mirroring init_opt_state's structure."""
+    is_leaf = lambda x: isinstance(x, tuple) or x is None
+
+    def one(spec, shape):
+        spec = tuple(spec) if spec is not None else (None,) * len(shape.shape)
+        st = {}
+        if cfg.b1 > 0:
+            st["m"] = spec
+        if cfg.factored and _is_factorable(shape.shape):
+            st["vr"] = spec[:-1]
+            st["vc"] = spec[:-2] + spec[-1:]
+        else:
+            st["v"] = spec
+        return st
+
+    per_param = jax.tree.map(one, param_specs, params_shapes, is_leaf=is_leaf)
+    return {"step": None, "per_param": per_param}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    # scale in native dtype: avoids materialising a full f32 copy of grads
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    """Returns (new_params, new_state). Handles both full and factored v."""
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def one(p, g, st):
+        g32 = g.astype(jnp.float32)
+        new_st = {}
+        if cfg.b1 > 0:
+            m = st["m"].astype(jnp.float32) * cfg.b1 + g32 * (1 - cfg.b1)
+            new_st["m"] = m.astype(cfg.mdt)
+            m_hat = m / bc1
+        else:
+            m_hat = g32
+        if "v" in st:
+            v = st["v"].astype(jnp.float32) * cfg.b2 + g32 * g32 * (1 - cfg.b2)
+            new_st["v"] = v.astype(cfg.mdt)
+            denom = jnp.sqrt(v / bc2) + cfg.eps
+        else:
+            g2 = g32 * g32
+            vr = st["vr"].astype(jnp.float32) * cfg.b2 \
+                + g2.mean(axis=-1) * (1 - cfg.b2)
+            vc = st["vc"].astype(jnp.float32) * cfg.b2 \
+                + g2.mean(axis=-2) * (1 - cfg.b2)
+            new_st["vr"], new_st["vc"] = vr.astype(cfg.mdt), vc.astype(cfg.mdt)
+            vr_hat, vc_hat = vr / bc2, vc / bc2
+            v_est = (vr_hat[..., None] * vc_hat[..., None, :]
+                     / jnp.maximum(vr_hat.mean(-1)[..., None, None], 1e-30))
+            denom = jnp.sqrt(v_est) + cfg.eps
+        upd = m_hat / denom + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * upd).astype(p.dtype), new_st
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_s = treedef.flatten_up_to(state["per_param"])
+    new = [one(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = jax.tree.unflatten(treedef, [a for a, _ in new])
+    new_per = jax.tree.unflatten(treedef, [b for _, b in new])
+    return new_params, {"step": step, "per_param": new_per}

@@ -1,0 +1,120 @@
+"""BFS correctness: every mode == numpy oracle exactly (deterministic
+min-parent rule), Graph500 validator, heuristic trace shape."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.csr import to_numpy_adj
+from repro.core.hybrid import bfs
+from repro.core.ref import bfs_queue, bfs_reference
+from repro.graph.generator import (rmat_graph, sample_roots,
+                                   uniform_random_graph)
+from repro.graph.validate import ValidationError, validate_bfs_tree
+
+MODES = ["hybrid", "topdown", "bottomup_simd", "bottomup_nosimd",
+         "hybrid_nosimd"]
+
+
+@pytest.fixture(scope="module")
+def g_rmat():
+    return rmat_graph(10, 16, seed=0)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_modes_match_oracle_rmat(g_rmat, mode):
+    rp, ci = to_numpy_adj(g_rmat)
+    for root in sample_roots(g_rmat, 3, seed=1):
+        out = bfs(g_rmat, int(root), mode)
+        pref, _ = bfs_reference(rp, ci, int(root))
+        np.testing.assert_array_equal(np.asarray(out.parent), pref)
+        np.testing.assert_array_equal(np.asarray(out.depth),
+                                      bfs_queue(rp, ci, int(root)))
+        validate_bfs_tree(rp, ci, np.asarray(out.parent), int(root))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(10, 400), st.integers(10, 1200), st.integers(0, 10 ** 6))
+def test_property_random_graphs(n, m, seed):
+    g = uniform_random_graph(n, m, seed=seed)
+    rp, ci = to_numpy_adj(g)
+    deg = np.asarray(g.deg)
+    roots = np.flatnonzero(deg > 0)
+    if len(roots) == 0:
+        return
+    root = int(roots[seed % len(roots)])
+    pref, dref = bfs_reference(rp, ci, root)
+    for mode in ("hybrid", "bottomup_simd"):
+        out = bfs(g, root, mode)
+        np.testing.assert_array_equal(np.asarray(out.parent), pref)
+        np.testing.assert_array_equal(np.asarray(out.depth), dref)
+
+
+def test_max_pos_invariance(g_rmat):
+    """Parents must be identical for any MAX_POS (fallback covers the rest)."""
+    rp, ci = to_numpy_adj(g_rmat)
+    root = int(sample_roots(g_rmat, 1, seed=3)[0])
+    pref, _ = bfs_reference(rp, ci, root)
+    for max_pos in (1, 4, 8, 32):
+        out = bfs(g_rmat, root, "bottomup_simd", 14.0, 24.0, max_pos)
+        np.testing.assert_array_equal(np.asarray(out.parent), pref)
+
+
+def test_hybrid_trace_pattern(g_rmat):
+    """Paper Table 2: TD on the first layer, BU in the middle layers."""
+    root = int(sample_roots(g_rmat, 1, seed=1)[0])
+    out = bfs(g_rmat, root, "hybrid")
+    dirs = np.asarray(out.trace_dir)[:int(out.num_layers)]
+    assert dirs[0] == 0, "layer 1 must be top-down"
+    assert (dirs == 1).any(), "middle layers must switch to bottom-up"
+
+
+def test_counters_monotonic(g_rmat):
+    root = int(sample_roots(g_rmat, 1, seed=1)[0])
+    out = bfs(g_rmat, root, "hybrid")
+    n_layers = int(out.num_layers)
+    eu = np.asarray(out.trace_eu)[:n_layers]
+    assert (np.diff(eu) <= 0).all(), "unexplored edges must shrink"
+
+
+def test_pallas_probe_end_to_end(g_rmat):
+    rp, ci = to_numpy_adj(g_rmat)
+    root = int(sample_roots(g_rmat, 1, seed=2)[0])
+    out = bfs(g_rmat, root, "hybrid", 14.0, 24.0, 8, "pallas")
+    pref, _ = bfs_reference(rp, ci, root)
+    np.testing.assert_array_equal(np.asarray(out.parent), pref)
+
+
+def test_validator_catches_bad_trees(g_rmat):
+    rp, ci = to_numpy_adj(g_rmat)
+    root = int(sample_roots(g_rmat, 1, seed=1)[0])
+    out = bfs(g_rmat, root, "hybrid")
+    parent = np.asarray(out.parent).copy()
+    # corrupt: point a reached vertex at a non-adjacent vertex
+    reached = np.flatnonzero((parent >= 0) & (np.arange(len(parent)) != root))
+    v = int(reached[0])
+    adj = set(ci[rp[v]:rp[v + 1]])
+    bad = next(u for u in range(g_rmat.n) if u not in adj and u != v)
+    parent[v] = bad
+    with pytest.raises(ValidationError):
+        validate_bfs_tree(rp, ci, parent, root)
+    # corrupt: create a 2-cycle
+    parent2 = np.asarray(out.parent).copy()
+    a = int(reached[1])
+    b = int(parent2[a])
+    if b != root:
+        parent2[b] = a
+        with pytest.raises(ValidationError):
+            validate_bfs_tree(rp, ci, parent2, root)
+
+
+def test_ell_topdown_matches_oracle(g_rmat):
+    """Beyond-paper ELL top-down (bounded slabs + residue) is exact."""
+    rp, ci = to_numpy_adj(g_rmat)
+    for root in sample_roots(g_rmat, 2, seed=7):
+        for mode in ("hybrid", "topdown"):
+            out = bfs(g_rmat, int(root), mode, 14.0, 24.0, 8, "xla", True,
+                      "ell")
+            pref, _ = bfs_reference(rp, ci, int(root))
+            np.testing.assert_array_equal(np.asarray(out.parent), pref)

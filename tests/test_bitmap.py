@@ -1,0 +1,52 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitmap
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    mask = jnp.asarray(rng.random(n) < 0.5)
+    words = bitmap.pack(mask)
+    assert words.dtype == jnp.uint32
+    assert words.shape[0] == bitmap.num_words(n)
+    back = bitmap.unpack(words, n)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(mask))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
+def test_test_matches_mask(n, seed):
+    rng = np.random.default_rng(seed)
+    mask = jnp.asarray(rng.random(n) < 0.3)
+    words = bitmap.pack(mask)
+    idx = jnp.asarray(rng.integers(0, n, 64))
+    got = bitmap.test(words, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(mask)[idx])
+
+
+def test_out_of_range_is_false():
+    words = bitmap.pack(jnp.ones(10, bool))
+    assert not bool(bitmap.test(words, jnp.asarray([320]))[0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 400), st.integers(0, 2 ** 31 - 1))
+def test_popcount(n, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(n) < 0.5
+    words = bitmap.pack(jnp.asarray(mask))
+    assert int(bitmap.popcount_words(words)) == int(mask.sum())
+
+
+def test_set_bits_scatter_or():
+    n = 100
+    words = bitmap.pack(jnp.zeros(n, bool))
+    idx = jnp.asarray([0, 31, 32, 63, 64, 99, 99])
+    words = bitmap.set_bits(words, idx)
+    mask = np.asarray(bitmap.unpack(words, n))
+    assert set(np.flatnonzero(mask)) == {0, 31, 32, 63, 64, 99}

@@ -1,0 +1,89 @@
+"""Unit tests for the loop-aware HLO roofline parser."""
+import numpy as np
+
+from repro.launch.roofline import (_loop_multipliers, _split_computations,
+                                   _type_bytes, parse_collectives,
+                                   parse_hbm_bytes, roofline_terms)
+
+HLO = """
+HloModule test
+
+%region_body.10 (arg.1: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %arg.1 = (s32[], f32[128,256]{1,0}) parameter(0)
+  %gte.0 = s32[] get-tuple-element(%arg.1), index=0
+  %gte.1 = f32[128,256]{1,0} get-tuple-element(%arg.1), index=1
+  %ag = f32[128,256]{1,0} all-reduce(%gte.1), replica_groups=[16,16]<=[256]
+  %c1 = s32[] constant(1)
+  %add = s32[] add(%gte.0, %c1)
+  ROOT %tuple = (s32[], f32[128,256]{1,0}) tuple(%add, %ag)
+}
+
+%region_cond.20 (arg.2: (s32[], f32[128,256])) -> pred[] {
+  %arg.2 = (s32[], f32[128,256]{1,0}) parameter(0)
+  %gte.2 = s32[] get-tuple-element(%arg.2), index=0
+  %c32 = s32[] constant(32)
+  ROOT %lt = pred[] compare(%gte.2, %c32), direction=LT
+}
+
+ENTRY %main.1 (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag2 = f32[128,256]{1,0} all-gather(%p0), replica_groups=[16,16]<=[256]
+  %c0 = s32[] constant(0)
+  %t0 = (s32[], f32[128,256]{1,0}) tuple(%c0, %ag2)
+  %w = (s32[], f32[128,256]{1,0}) while(%t0), condition=%region_cond.20, body=%region_body.10
+  ROOT %out = f32[128,256]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_type_bytes():
+    assert _type_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert _type_bytes("bf16[10]") == 20
+    assert _type_bytes("(s32[], f32[8,8])") == 4 + 256
+
+
+def test_split_and_multipliers():
+    comps, entry = _split_computations(HLO)
+    assert entry == "main.1"
+    assert "region_body.10" in comps and "region_cond.20" in comps
+    mult = _loop_multipliers(comps, entry)
+    assert mult["main.1"] == 1.0
+    assert mult["region_body.10"] == 32.0   # trip count from the condition
+
+
+def test_collectives_weighted_by_trip_count():
+    stats = parse_collectives(HLO, n_devices=256)
+    r = 128 * 256 * 4
+    # all-gather in entry: R*(k-1)/k with k=16; all-reduce in body x32 trips
+    expect_ag = r * 15 / 16
+    expect_ar = 32 * 2 * r * 15 / 16
+    assert abs(stats.by_op["all-gather"]["wire_bytes"] - expect_ag) < 1
+    assert abs(stats.by_op["all-reduce"]["wire_bytes"] - expect_ar) < 1
+
+
+def test_hbm_parse_counts_loop_body():
+    b = parse_hbm_bytes(HLO)
+    # body all-reduce runs 32x: write result + read operand each iteration
+    assert b >= 32 * 2 * 128 * 256 * 4
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(197e12, 819e9 * 2, 50e9 * 0.5)
+    assert t["dominant"] == "memory"
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["roofline_fraction"] - 0.5) < 1e-9
+
+
+def test_analytic_flops_sane():
+    from repro.configs.base import get_arch
+    from repro.launch.flops import analytic_flops
+    arch = get_arch("phi4-mini-3.8b")
+    shape = arch.shape("train_4k")
+    f = analytic_flops(arch, shape)
+    n_act = arch.model_cfg.active_param_count()
+    tokens = 256 * 4096
+    assert f["model_flops"] > 6 * n_act * tokens * 0.99
+    assert f["executed_flops"] > f["model_flops"]
+    # decode flops are tiny vs train
+    fd = analytic_flops(arch, arch.shape("decode_32k"))
+    assert fd["model_flops"] < f["model_flops"] / 100
