@@ -1,0 +1,19 @@
+# Single entry point for CI and future PRs.
+#
+#   make test         tier-1 suite (the ROADMAP verify command)
+#   make bench-smoke  MS-BFS batched-vs-serial TEPS at a small scale
+#   make bench        the same at the paper-protocol scale 14
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke bench
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+bench-smoke:
+	$(PYTHON) benchmarks/msbfs_teps.py --scale 10
+
+bench:
+	$(PYTHON) benchmarks/msbfs_teps.py --scale 14

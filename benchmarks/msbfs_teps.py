@@ -1,0 +1,69 @@
+"""MS-BFS aggregate TEPS: batched 64-root sweep vs the serial 64-root loop.
+
+The Graph500 protocol answers 64 roots; the serial harness replays one
+compiled executable per root, the batched harness packs all 64 roots into
+uint32 bit-lanes and answers them in ONE traversal sweep
+(``repro.core.msbfs``). The headline is aggregate TEPS — total traversed
+edges over total wall time — i.e. throughput under a 64-query batch, the
+serving axis from ROADMAP.
+
+  PYTHONPATH=src python benchmarks/msbfs_teps.py --scale 14
+
+Wall-clock on the CPU container is not comparable to KNC GTEPS; the
+*relative* claim validated here is batched >= serial throughput.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.graph.generator import rmat_graph
+from repro.graph.graph500 import run_graph500
+
+
+def run(scale: int = 14, edgefactor: int = 16, num_roots: int = 64,
+        mode: str = "hybrid", probe_impl: str = "xla", seed: int = 0,
+        validate: bool = False):
+    g = rmat_graph(scale, edgefactor, seed)
+    print(f"# MS-BFS aggregate TEPS — scale={scale} ef={edgefactor} "
+          f"roots={num_roots} mode={mode}")
+    print(f"  n={g.n:,} vertices, m={g.m:,} directed edges")
+
+    results = {}
+    for label, batched in (("serial", False), ("batched", True)):
+        res = run_graph500(scale, edgefactor, mode=mode,
+                           num_roots=num_roots, seed=seed, graph=g,
+                           probe_impl=probe_impl, validate=validate,
+                           batched=batched)
+        results[label] = res
+        s = res.summary()
+        print(f"  {label:8s}: aggregate {s['aggregate_teps'] / 1e6:10.2f} "
+              f"MTEPS  (harmonic-mean per-root "
+              f"{s['harmonic_mean_teps'] / 1e6:10.2f} MTEPS, "
+              f"total time {sum(res.times):.3f}s, "
+              f"{s['nroots']} roots)")
+
+    speedup = (results["batched"].aggregate_teps
+               / max(results["serial"].aggregate_teps, 1e-12))
+    print(f"  batched/serial aggregate-TEPS speedup: {speedup:.2f}x")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=14)
+    ap.add_argument("--edgefactor", type=int, default=16)
+    ap.add_argument("--roots", type=int, default=64)
+    ap.add_argument("--mode", default="hybrid",
+                    choices=("hybrid", "topdown", "bottomup_simd"))
+    ap.add_argument("--probe-impl", default="xla",
+                    choices=("xla", "pallas"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--validate", action="store_true")
+    args = ap.parse_args()
+    run(scale=args.scale, edgefactor=args.edgefactor, num_roots=args.roots,
+        mode=args.mode, probe_impl=args.probe_impl, seed=args.seed,
+        validate=args.validate)
+
+
+if __name__ == "__main__":
+    main()

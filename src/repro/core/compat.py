@@ -1,0 +1,66 @@
+"""jax version-compatibility shims.
+
+The distributed paths were written against the modern API surface
+(``jax.shard_map``, ``jax.set_mesh``, ``jax.sharding.get_abstract_mesh``);
+the container may ship an older jax (0.4.x) where shard_map still lives in
+``jax.experimental.shard_map`` (with ``check_rep`` instead of
+``check_vma``) and there is no ambient-mesh setter. Everything here
+resolves to the native API when present and otherwise emulates it, so
+callers write the modern form only.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_AMBIENT_MESH = None    # fallback ambient mesh for pre-set_mesh jax
+
+
+def shard_map(f, mesh=None, *, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` when available, else the experimental one.
+
+    ``mesh=None`` resolves the ambient mesh installed by ``set_mesh``.
+    ``check_vma`` maps onto the old spelling ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if mesh is not None:
+            kwargs["mesh"] = mesh
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if mesh is None:
+        mesh = _AMBIENT_MESH
+        if mesh is None:
+            raise ValueError("no mesh: pass mesh= or enter compat.set_mesh")
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``with set_mesh(mesh):`` — ambient mesh for shard_map/sharding."""
+    global _AMBIENT_MESH
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+        return
+    prev = _AMBIENT_MESH
+    _AMBIENT_MESH = mesh
+    try:
+        with mesh:              # legacy physical-mesh context, for xmap-era
+            yield mesh          # consumers; harmless otherwise
+    finally:
+        _AMBIENT_MESH = prev
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or None when none is set (callers treat an empty
+    mesh the same as None)."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and mesh.axis_names:
+            return mesh
+        return None
+    return _AMBIENT_MESH

@@ -43,6 +43,14 @@ def from_edges(src: np.ndarray, dst: np.ndarray, n: int,
 
     Graph500 graphs are undirected: ``symmetrize`` adds the reverse edges.
     """
+    if len(src) * (2 if symmetrize else 1) >= 2 ** 31:
+        # row_ptr/col_idx are int32 and every BFS counter (edges_traversed,
+        # trace_ef/eu) sums degrees in int32 — refuse graphs that would
+        # silently overflow rather than produce wrong TEPS. Checked before
+        # any copy/symmetrization so absurd inputs fail fast; conservative
+        # w.r.t. self-loop/dup removal.
+        raise ValueError(
+            f"edge count {len(src)} overflows the int32 CSR/counter layout")
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
     if symmetrize:

@@ -30,7 +30,7 @@ import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-from repro.core import bitmap
+from repro.core import bitmap, compat
 from repro.core.csr import CSRGraph
 
 MAX_LAYERS = 64
@@ -86,10 +86,12 @@ def partition_graph(g: CSRGraph, ndev: int) -> DistGraph:
                      deg=jnp.asarray(deg_l), n=n, n_orig=n_orig, m_loc=m_loc)
 
 
-def _flat_axis_index(axes):
+def _flat_axis_index(axes, sizes):
+    # sizes come from the (static) mesh shape — jax.lax.axis_size does not
+    # exist on jax 0.4.x
     idx = jnp.int32(0)
     for name in axes:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * sizes[name] + jax.lax.axis_index(name)
     return idx
 
 
@@ -104,7 +106,7 @@ def _dist_bfs_impl(row_ptr_s, col_s, srcloc_s, deg_s, root, *, mesh: Mesh,
 
     def body(row_ptr, col, src_loc, deg, root):
         row_ptr, col, src_loc, deg = (row_ptr[0], col[0], src_loc[0], deg[0])
-        base = _flat_axis_index(axes) * n_loc
+        base = _flat_axis_index(axes, dict(mesh.shape)) * n_loc
         local_ids = base + jnp.arange(n_loc, dtype=jnp.int32)
 
         frontier = local_ids == root
@@ -200,7 +202,7 @@ def _dist_bfs_impl(row_ptr_s, col_s, srcloc_s, deg_s, root, *, mesh: Mesh,
     spec_dev = P(axes)   # leading dim sharded over all mesh axes jointly
     # out_specs=P(): outputs are replicated (all_gather / psum products);
     # the static VMA check can't see through the while_loop, so disable it.
-    parent_full, layers = jax.shard_map(
+    parent_full, layers = compat.shard_map(
         body, mesh=mesh,
         in_specs=(spec_dev, spec_dev, spec_dev, spec_dev, P()),
         out_specs=(P(), P()), check_vma=False,

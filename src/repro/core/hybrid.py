@@ -33,14 +33,18 @@ BETA_DEFAULT = 24.0
 
 
 class BFSResult(NamedTuple):
+    # All counters are int32: values are bounded by m (the directed edge
+    # count), and ``from_edges`` rejects graphs with m >= 2**31 — for
+    # Graph500 edgefactor 16 that is headroom up to scale ~26 (scale 20 is
+    # m ~ 2**25.1, far below the limit).
     parent: jnp.ndarray        # int32[n], -1 unreached, parent[root]=root
     depth: jnp.ndarray         # int32[n], -1 unreached
     num_layers: jnp.ndarray    # int32 scalar
-    edges_traversed: jnp.ndarray  # int64 scalar — 2x undirected component edges
+    edges_traversed: jnp.ndarray  # int32 scalar — 2x undirected component edges
     trace_dir: jnp.ndarray     # int32[MAX_TRACE]: 0 TD, 1 BU, -1 unused
-    trace_vf: jnp.ndarray      # int64[MAX_TRACE]
-    trace_ef: jnp.ndarray      # int64[MAX_TRACE]
-    trace_eu: jnp.ndarray      # int64[MAX_TRACE]
+    trace_vf: jnp.ndarray      # int32[MAX_TRACE]
+    trace_ef: jnp.ndarray      # int32[MAX_TRACE]
+    trace_eu: jnp.ndarray      # int32[MAX_TRACE]
 
 
 class _State(NamedTuple):
@@ -62,6 +66,23 @@ def _counters(g: CSRGraph, frontier, visited):
     v_f = jnp.sum(frontier, dtype=jnp.int32)
     e_u = jnp.sum(jnp.where(visited, 0, deg))
     return e_f, v_f, e_u
+
+
+def switch_direction(topdown, e_f, v_f, e_u, n: int,
+                     alpha: float = ALPHA_DEFAULT,
+                     beta: float = BETA_DEFAULT):
+    """Paper Algorithm 3 switching rule (Beamer et al.), one layer.
+
+    TD->BU when ``e_f > e_u / alpha``; BU->TD when ``v_f < n / beta``;
+    otherwise keep the current direction. All arguments may be scalars or
+    arrays (the MS-BFS controller applies the rule per packed lane).
+    Returns the new ``topdown`` flag(s).
+    """
+    go_bu = topdown & (jnp.asarray(e_f, jnp.float32)
+                       > jnp.asarray(e_u, jnp.float32) / alpha)
+    go_td = (~topdown) & (jnp.asarray(v_f, jnp.float32)
+                          < jnp.float32(n) / beta)
+    return jnp.where(go_bu, False, jnp.where(go_td, True, topdown))
 
 
 @partial(jax.jit, static_argnums=(2, 3, 4, 5, 6, 7, 8))
@@ -89,11 +110,8 @@ def bfs(g: CSRGraph, root, mode: str = "hybrid",
         elif mode in ("bottomup_simd", "bottomup_nosimd"):
             topdown = jnp.bool_(False)
         else:  # hybrid / hybrid_nosimd — paper Algorithm 3
-            go_bu = s.topdown & (e_f.astype(jnp.float32)
-                                 > e_u.astype(jnp.float32) / alpha)
-            go_td = (~s.topdown) & (v_f.astype(jnp.float32)
-                                    < jnp.float32(n) / beta)
-            topdown = jnp.where(go_bu, False, jnp.where(go_td, True, s.topdown))
+            topdown = switch_direction(s.topdown, e_f, v_f, e_u, n,
+                                       alpha, beta)
 
         def run_td(args):
             f, v, p = args

@@ -5,6 +5,11 @@ roots (degree>0, as the reference code does), run BFS per root with the
 compiled executable, collect per-root wall time and TEPS, and report the
 harmonic mean (the paper's headline number) plus min/max/mean.
 
+``batched=True`` answers all 64 roots in ONE traversal sweep via the
+bit-packed MS-BFS subsystem (``repro.core.msbfs``): per-root wall time is
+then the shared sweep time, and ``aggregate_teps`` (total edges over total
+wall time) is the number to compare against the serial loop.
+
 TEPS counts the *undirected* edges of the traversed component
 (sum of degrees of reached vertices / 2), per the Graph500 spec.
 """
@@ -14,12 +19,19 @@ import time
 from dataclasses import dataclass, field
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.csr import CSRGraph, to_numpy_adj
 from repro.core.hybrid import bfs
+from repro.core.msbfs import MAX_LANES, msbfs
 from repro.graph.generator import rmat_graph, sample_roots
 from repro.graph.validate import validate_bfs_tree
+
+# serial mode name -> MS-BFS controller mode
+_BATCHED_MODE = {"hybrid": "hybrid", "hybrid_nosimd": "hybrid",
+                 "topdown": "topdown", "bottomup_simd": "bottomup",
+                 "bottomup_nosimd": "bottomup"}
 
 
 @dataclass
@@ -27,6 +39,7 @@ class Graph500Result:
     scale: int
     edgefactor: int
     mode: str
+    batched: bool = False
     teps: list[float] = field(default_factory=list)
     times: list[float] = field(default_factory=list)
     traversed: list[int] = field(default_factory=list)
@@ -36,11 +49,20 @@ class Graph500Result:
         t = np.asarray([x for x in self.teps if x > 0])
         return float(len(t) / np.sum(1.0 / t)) if len(t) else 0.0
 
+    @property
+    def aggregate_teps(self) -> float:
+        """Total traversed edges over total wall time — the serving-throughput
+        number; for batched runs ``times`` holds the single sweep time."""
+        total_t = float(np.sum(self.times))
+        return float(np.sum(self.traversed)) / total_t if total_t > 0 else 0.0
+
     def summary(self) -> dict:
         t = np.asarray(self.teps)
         return dict(scale=self.scale, edgefactor=self.edgefactor,
-                    mode=self.mode, nroots=len(t),
+                    mode=self.mode, batched=self.batched,
+                    nroots=len(self.traversed),
                     harmonic_mean_teps=self.harmonic_mean_teps,
+                    aggregate_teps=self.aggregate_teps,
                     mean_teps=float(t.mean()) if len(t) else 0.0,
                     max_teps=float(t.max()) if len(t) else 0.0,
                     min_teps=float(t.min()) if len(t) else 0.0,
@@ -52,9 +74,17 @@ def run_graph500(scale: int, edgefactor: int, mode: str = "hybrid",
                  alpha: float = 14.0, beta: float = 24.0, max_pos: int = 8,
                  probe_impl: str = "xla", warmup: bool = True,
                  skip_empty_fallback: bool = True, td_impl: str = "edge",
-                 graph: CSRGraph | None = None) -> Graph500Result:
+                 graph: CSRGraph | None = None,
+                 batched: bool = False) -> Graph500Result:
     g = graph if graph is not None else rmat_graph(scale, edgefactor, seed)
     roots = sample_roots(g, num_roots, seed=seed + 1)
+    if batched:
+        if td_impl != "edge" or not skip_empty_fallback:
+            raise ValueError(
+                "batched=True does not support td_impl/skip_empty_fallback "
+                "(the MS-BFS sweep has its own step formulations)")
+        return _run_batched(g, roots, scale, edgefactor, mode, alpha, beta,
+                            max_pos, probe_impl, warmup, validate)
     res = Graph500Result(scale=scale, edgefactor=edgefactor, mode=mode)
 
     run = lambda r: bfs(g, r, mode, alpha, beta, max_pos, probe_impl,
@@ -74,4 +104,41 @@ def run_graph500(scale: int, edgefactor: int, mode: str = "hybrid",
         res.teps.append(edges / dt if dt > 0 else 0.0)
         if validate:
             validate_bfs_tree(rp, ci, np.asarray(out.parent), int(r))
+    return res
+
+
+def _run_batched(g: CSRGraph, roots: np.ndarray, scale: int, edgefactor: int,
+                 mode: str, alpha: float, beta: float, max_pos: int,
+                 probe_impl: str, warmup: bool,
+                 validate: bool) -> Graph500Result:
+    """All roots in one MS-BFS sweep, MAX_LANES (64) per batch.
+
+    The result's ``mode`` records the MS-BFS controller actually executed
+    (there is no packed nosimd variant — comparing a serial ``*_nosimd``
+    run against a batched one would cross the paper's SIMD axis silently).
+    """
+    msbfs_mode = _BATCHED_MODE[mode]
+    res = Graph500Result(scale=scale, edgefactor=edgefactor,
+                         mode=msbfs_mode, batched=True)
+    rp, ci = (to_numpy_adj(g) if validate else (None, None))
+    for lo in range(0, len(roots), MAX_LANES):
+        batch = jnp.asarray(roots[lo:lo + MAX_LANES], dtype=jnp.int32)
+        run = lambda: msbfs(g, batch, msbfs_mode, alpha, beta, max_pos,
+                            probe_impl)
+        if warmup:
+            jax.block_until_ready(run())  # compile once per batch shape
+        t0 = time.perf_counter()
+        out = run()
+        jax.block_until_ready(out.parent)
+        dt = time.perf_counter() - t0
+        edges = np.asarray(out.edges_traversed) // 2
+        res.times.append(dt)
+        res.traversed.extend(int(e) for e in edges)
+        # per-root TEPS against the shared sweep time (the sweep answers
+        # every lane at once); aggregate_teps is the headline comparison
+        res.teps.extend(float(e) / dt if dt > 0 else 0.0 for e in edges)
+        if validate:
+            parent = np.asarray(out.parent)
+            for r_i, root in enumerate(roots[lo:lo + MAX_LANES]):
+                validate_bfs_tree(rp, ci, parent[:, r_i], int(root))
     return res

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel for the word-packed MS-BFS bottom-up probe.
+
+The single-source probe (``bottom_up_probe``) tests ONE frontier bit per
+gathered neighbour; here each gather pulls a whole uint32 *lane word* — 32
+concurrent traversals answered by one load — and accumulates with bitwise
+OR instead of a select. One kernel invocation handles one word plane
+(lane words for roots [32w, 32w+32)); the ops wrapper loops the (static,
+<= 2) planes.
+
+Per probe round ``pos``:
+
+  live = ((need & ~acc) != 0) & (pos < deg)   # lanes still unserved
+  vadj = col_idx[start + pos]                 # LoadAdj: masked gather
+  acc |= frontier_plane[vadj]  (where live)   # word-OR, 32 lanes at once
+
+VMEM residency mirrors ``bottom_up_probe``: vertex-tile operands stream
+via BlockSpec (auto double-buffered), while ``col_idx`` and the per-vertex
+frontier plane are held whole in VMEM. MAX_POS is statically unrolled.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANES, SUBLANES, TILE, cdiv
+
+
+def _msbfs_probe_kernel(starts_ref, deg_ref, need_ref, col_ref, fp_ref,
+                        acc_out, *, max_pos: int, m: int):
+    starts = starts_ref[...]
+    deg = deg_ref[...]
+    need = need_ref[...]        # uint32 lane words still unserved per vertex
+    col = col_ref[...]          # local edge slab, VMEM-resident
+    fp = fp_ref[...]            # frontier plane (uint32 word per vertex)
+
+    acc = jnp.zeros_like(need)
+    for pos in range(max_pos):  # static unroll — the paper's MAX_POS loop
+        live = ((need & ~acc) != 0) & (pos < deg)
+        idx = jnp.clip(starts + pos, 0, m - 1)
+        vadj = jnp.take(col, idx, axis=0)                  # LoadAdj gather
+        w = jnp.take(fp, vadj, axis=0)                     # lane-word gather
+        acc = acc | jnp.where(live, w, jnp.uint32(0))
+
+    acc_out[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("max_pos", "interpret"))
+def msbfs_probe_pallas(starts: jnp.ndarray, deg: jnp.ndarray,
+                       need_plane: jnp.ndarray, col_idx: jnp.ndarray,
+                       frontier_plane: jnp.ndarray, max_pos: int = 8,
+                       interpret: bool = True):
+    """Returns acc uint32[n] — OR of the first ``max_pos`` neighbours'
+    frontier words, per vertex, retired once ``need`` is fully served.
+
+    Shapes: starts/deg int32[n]; need_plane/frontier_plane uint32[n];
+    col_idx int32[m]. n is padded to a multiple of 1024 internally.
+    """
+    n = starts.shape[0]
+    m = col_idx.shape[0]
+    n_pad = cdiv(n, TILE) * TILE
+    pad = n_pad - n
+
+    def pad1(x, value=0):
+        return jnp.pad(x, (0, pad), constant_values=value) if pad else x
+
+    starts2 = pad1(starts).reshape(-1, SUBLANES, LANES)
+    deg2 = pad1(deg).reshape(-1, SUBLANES, LANES)
+    need2 = pad1(need_plane).reshape(-1, SUBLANES, LANES)
+    fp = pad1(frontier_plane)   # padded so gathers of padded vadj are safe
+
+    grid = (n_pad // TILE,)
+    tile_spec = pl.BlockSpec((1, SUBLANES, LANES), lambda i: (i, 0, 0))
+    full_col = pl.BlockSpec(col_idx.shape, lambda i: (0,))
+    full_fp = pl.BlockSpec(fp.shape, lambda i: (0,))
+
+    acc = pl.pallas_call(
+        functools.partial(_msbfs_probe_kernel, max_pos=max_pos, m=m),
+        grid=grid,
+        in_specs=[tile_spec, tile_spec, tile_spec, full_col, full_fp],
+        out_specs=tile_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pad // TILE, SUBLANES, LANES),
+                                       jnp.uint32),
+        interpret=interpret,
+    )(starts2, deg2, need2, col_idx, fp)
+
+    return acc.reshape(n_pad)[:n]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the msbfs_probe kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def msbfs_probe_ref(starts, deg, need_plane, col_idx, frontier_plane,
+                    max_pos: int = 8):
+    """Identical math to the kernel, plain jnp. Returns acc uint32[n]."""
+    m = col_idx.shape[0]
+    acc = jnp.zeros_like(need_plane)
+    for pos in range(max_pos):
+        live = ((need_plane & ~acc) != 0) & (pos < deg)
+        idx = jnp.clip(starts + pos, 0, m - 1)
+        vadj = col_idx[idx]
+        acc = acc | jnp.where(live, frontier_plane[vadj], jnp.uint32(0))
+    return acc

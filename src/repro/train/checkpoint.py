@@ -22,7 +22,7 @@ import numpy as np
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree), None
+    # tree_util spelling: jax.tree.flatten_with_path is absent on jax 0.4.x
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in leaves]
 

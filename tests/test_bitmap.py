@@ -1,14 +1,15 @@
+"""Packed uint32 bitmap ops. Hypothesis property tests are
+importorskip-guarded; deterministic fallback sweeps always run."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
 
 from repro.core import bitmap
 
+DET_CASES = [(1, 0), (31, 1), (32, 2), (33, 3), (100, 4), (300, 5)]
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
-def test_pack_unpack_roundtrip(n, seed):
+
+def _check_pack_unpack_roundtrip(n, seed):
     rng = np.random.default_rng(seed)
     mask = jnp.asarray(rng.random(n) < 0.5)
     words = bitmap.pack(mask)
@@ -18,9 +19,7 @@ def test_pack_unpack_roundtrip(n, seed):
     np.testing.assert_array_equal(np.asarray(back), np.asarray(mask))
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
-def test_test_matches_mask(n, seed):
+def _check_test_matches_mask(n, seed):
     rng = np.random.default_rng(seed)
     mask = jnp.asarray(rng.random(n) < 0.3)
     words = bitmap.pack(mask)
@@ -29,18 +28,40 @@ def test_test_matches_mask(n, seed):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(mask)[idx])
 
 
-def test_out_of_range_is_false():
-    words = bitmap.pack(jnp.ones(10, bool))
-    assert not bool(bitmap.test(words, jnp.asarray([320]))[0])
-
-
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 400), st.integers(0, 2 ** 31 - 1))
-def test_popcount(n, seed):
+def _check_popcount(n, seed):
     rng = np.random.default_rng(seed)
     mask = rng.random(n) < 0.5
     words = bitmap.pack(jnp.asarray(mask))
     assert int(bitmap.popcount_words(words)) == int(mask.sum())
+
+
+@pytest.mark.parametrize("n,seed", DET_CASES)
+def test_deterministic_sweep(n, seed):
+    """Fixed fallback case set — always runs, hypothesis or not."""
+    _check_pack_unpack_roundtrip(n, seed)
+    _check_test_matches_mask(n, seed)
+    _check_popcount(n, seed)
+
+
+def test_property_bitmap_ops():
+    """Hypothesis sweep — skipped when hypothesis is absent."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
+    def inner(n, seed):
+        _check_pack_unpack_roundtrip(n, seed)
+        _check_test_matches_mask(n, seed)
+        _check_popcount(n, seed)
+
+    inner()
+
+
+def test_out_of_range_is_false():
+    words = bitmap.pack(jnp.ones(10, bool))
+    assert not bool(bitmap.test(words, jnp.asarray([320]))[0])
 
 
 def test_set_bits_scatter_or():

@@ -54,6 +54,7 @@ def test_dist_bfs_pallas_probe():
 
 OWNER_AGG_CODE = """
 import jax, jax.numpy as jnp, numpy as np
+from repro.core.compat import set_mesh
 from repro.distributed.aggregate import owner_gather_scatter
 
 n, e, d = 64, 256, 8   # divisible by 8 devices
@@ -66,12 +67,12 @@ fn = lambda hj, ww: hj * ww[:, None]
 
 plain = owner_gather_scatter(feats, snd, rcv, w, fn, n)   # no mesh
 mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     sharded = jax.jit(lambda f: owner_gather_scatter(f, snd, rcv, w, fn, n))(feats)
 np.testing.assert_allclose(np.asarray(plain), np.asarray(sharded),
                            rtol=1e-5, atol=1e-5)
 # grads flow through the shard_map path
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     gr = jax.jit(jax.grad(lambda f: owner_gather_scatter(
         f, snd, rcv, w, fn, n).sum()))(feats)
 assert np.isfinite(np.asarray(gr)).all()

@@ -1,0 +1,156 @@
+"""Bit-packed MS-BFS parity: 64 packed roots == 64 serial ``bfs`` runs.
+
+Parents use the same deterministic min-id rule as the serial steps, so the
+comparison is exact array equality on parent AND depth, plus Graph500
+validator equivalence. Ring/star fixtures exercise lanes that terminate at
+different layers; the lane-word sweep covers R below/at/above one word.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import msbfs as ms
+from repro.core.csr import from_edges, to_numpy_adj
+from repro.core.hybrid import bfs
+from repro.core.msbfs import msbfs, pack_lanes, segment_or, unpack_lanes
+from repro.core.ref import bfs_reference
+from repro.graph.generator import rmat_graph, sample_roots
+from repro.graph.validate import validate_bfs_tree
+from repro.kernels.msbfs_probe.kernel import msbfs_probe_pallas
+from repro.kernels.msbfs_probe.ref import msbfs_probe_ref
+
+
+@pytest.fixture(scope="module")
+def g_rmat():
+    return rmat_graph(10, 16, seed=0)
+
+
+def ring_graph(n):
+    v = np.arange(n)
+    return from_edges(v, (v + 1) % n, n)
+
+
+def star_graph(n):
+    leaves = np.arange(1, n)
+    return from_edges(np.zeros(n - 1, np.int64), leaves, n)
+
+
+def _assert_lanes_match_serial(g, roots, out, mode="hybrid"):
+    rp, ci = to_numpy_adj(g)
+    for r_i, root in enumerate(roots):
+        pref, dref = bfs_reference(rp, ci, int(root))
+        np.testing.assert_array_equal(np.asarray(out.depth[:, r_i]), dref,
+                                      err_msg=f"lane {r_i} depth")
+        np.testing.assert_array_equal(np.asarray(out.parent[:, r_i]), pref,
+                                      err_msg=f"lane {r_i} parent")
+        validate_bfs_tree(rp, ci, np.asarray(out.parent[:, r_i]), int(root))
+
+
+@pytest.mark.parametrize("mode", ["hybrid", "topdown", "bottomup"])
+def test_msbfs_matches_serial_rmat(g_rmat, mode):
+    """Full 64-lane batch on R-MAT == 64 serial runs, all controller modes."""
+    roots = sample_roots(g_rmat, 64, seed=1)
+    out = msbfs(g_rmat, jnp.asarray(roots), mode)
+    _assert_lanes_match_serial(g_rmat, roots, out, mode)
+
+
+@pytest.mark.parametrize("num_roots", [1, 5, 32, 33])
+def test_msbfs_lane_word_sweep(g_rmat, num_roots):
+    """R below / at / above one 32-bit lane word."""
+    roots = sample_roots(g_rmat, num_roots, seed=2)
+    out = msbfs(g_rmat, jnp.asarray(roots), "hybrid")
+    assert out.parent.shape == (g_rmat.n, num_roots)
+    _assert_lanes_match_serial(g_rmat, roots, out)
+
+
+def test_msbfs_lanes_terminate_at_different_layers():
+    """Star (eccentricity 1-2) and ring (eccentricity n/2) lanes packed in
+    one batch: per-lane num_layers must match the serial loop count even
+    though the sweep keeps running for the deepest lane."""
+    n = 48
+    ring = ring_graph(n)
+    roots = np.array([0, 1, n // 2, n - 1])
+    out = msbfs(ring, jnp.asarray(roots), "hybrid")
+    _assert_lanes_match_serial(ring, roots, out)
+    for r_i, root in enumerate(roots):
+        s = bfs(ring, int(root), "hybrid")
+        assert int(out.num_layers[r_i]) == int(s.num_layers)
+        assert int(out.edges_traversed[r_i]) == int(s.edges_traversed)
+
+    star = star_graph(n)
+    roots = np.array([0, 1, 2, n - 1])     # center lane ends 2 layers early
+    out = msbfs(star, jnp.asarray(roots), "hybrid")
+    _assert_lanes_match_serial(star, roots, out)
+    layers = [int(x) for x in out.num_layers]
+    assert layers[0] < layers[1], "center lane must terminate first"
+    # idle lanes show -1 in the trace once their frontier empties
+    dirs = np.asarray(out.trace_dir)
+    assert (dirs[layers[0]:layers[1], 0] == -1).all()
+    assert (dirs[:layers[1] - 1, 1] != -1).all()
+
+
+def test_msbfs_per_lane_trace_matches_serial(g_rmat):
+    """Per-lane switching replays the serial alpha/beta decisions: the
+    lane's TD/BU trace equals the serial trace for the same root."""
+    roots = sample_roots(g_rmat, 8, seed=3)
+    out = msbfs(g_rmat, jnp.asarray(roots), "hybrid")
+    for r_i, root in enumerate(roots):
+        s = bfs(g_rmat, int(root), "hybrid")
+        nl = int(s.num_layers)
+        np.testing.assert_array_equal(
+            np.asarray(out.trace_dir[:nl, r_i]),
+            np.asarray(s.trace_dir[:nl]), err_msg=f"lane {r_i} trace_dir")
+        np.testing.assert_array_equal(np.asarray(out.trace_vf[:nl, r_i]),
+                                      np.asarray(s.trace_vf[:nl]))
+        np.testing.assert_array_equal(np.asarray(out.trace_ef[:nl, r_i]),
+                                      np.asarray(s.trace_ef[:nl]))
+        np.testing.assert_array_equal(np.asarray(out.trace_eu[:nl, r_i]),
+                                      np.asarray(s.trace_eu[:nl]))
+
+
+def test_msbfs_pallas_probe_end_to_end(g_rmat):
+    roots = sample_roots(g_rmat, 40, seed=4)
+    out = msbfs(g_rmat, jnp.asarray(roots), "hybrid", 14.0, 24.0, 8,
+                "pallas")
+    _assert_lanes_match_serial(g_rmat, roots, out)
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    for r in (1, 31, 32, 33, 64):
+        mask = jnp.asarray(rng.random((17, r)) < 0.5)
+        words = pack_lanes(mask)
+        assert words.shape == (17, ms.num_lane_words(r))
+        np.testing.assert_array_equal(np.asarray(unpack_lanes(words, r)),
+                                      np.asarray(mask))
+
+
+def test_segment_or_with_empty_and_trailing_rows():
+    """Empty rows (including trailing ones, whose row start == m) OR to 0
+    and must not corrupt their neighbours' segments."""
+    # rows: [a, b], [], [c], [] -> row_ptr [0, 2, 2, 3, 3]
+    row_ptr = jnp.asarray([0, 2, 2, 3, 3], jnp.int32)
+    vals = jnp.asarray([[1], [4], [8]], jnp.uint32)
+    out = np.asarray(segment_or(vals, row_ptr))
+    np.testing.assert_array_equal(out, [[5], [0], [8], [0]])
+
+
+@pytest.mark.parametrize("scale,ef,seed", [(8, 4, 0), (9, 8, 1), (7, 32, 2)])
+@pytest.mark.parametrize("max_pos", [1, 8])
+def test_msbfs_probe_kernel_vs_ref(scale, ef, seed, max_pos):
+    g = rmat_graph(scale, ef, seed=seed)
+    rng = np.random.default_rng(seed)
+    fro = jnp.asarray(rng.integers(0, 2 ** 32, g.n, dtype=np.uint32))
+    need = jnp.asarray(rng.integers(0, 2 ** 32, g.n, dtype=np.uint32))
+    a1 = msbfs_probe_pallas(g.row_ptr[:-1], g.deg, need, g.col_idx, fro,
+                            max_pos=max_pos, interpret=True)
+    a2 = msbfs_probe_ref(g.row_ptr[:-1], g.deg, need, g.col_idx, fro,
+                         max_pos=max_pos)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_msbfs_rejects_bad_batches(g_rmat):
+    with pytest.raises(ValueError, match="at most"):
+        msbfs(g_rmat, jnp.zeros((65,), jnp.int32))
+    with pytest.raises(ValueError, match="mode"):
+        msbfs(g_rmat, jnp.zeros((2,), jnp.int32), "sideways")

@@ -1,0 +1,83 @@
+"""Table-driven unit test of the alpha/beta TD<->BU rule (paper Algorithm 3),
+pinned independently of end-to-end runs: counters (e_f, v_f, e_u) ->
+expected direction per layer, plus the per-lane vectorised form MS-BFS uses.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hybrid import (ALPHA_DEFAULT, BETA_DEFAULT, bfs,
+                               switch_direction)
+from repro.graph.generator import rmat_graph, sample_roots
+
+N = 1024
+ALPHA, BETA = 14.0, 24.0
+
+# (currently_topdown, e_f, v_f, e_u) -> expected topdown after the rule.
+# TD->BU iff e_f > e_u / alpha; BU->TD iff v_f < n / beta; else keep.
+CASES = [
+    # TD stays TD: frontier edges still small vs unexplored
+    (True, 10, 4, 100_000, True),
+    # TD -> BU: e_f crosses e_u / alpha (100_000 / 14 ~ 7142.9)
+    (True, 7_143, 500, 100_000, False),
+    # TD boundary: e_f == e_u / alpha exactly is NOT a switch (strict >)
+    (True, 25, 10, 350, True),            # 350 / 14 == 25
+    (True, 26, 10, 350, False),           # one past the boundary
+    # BU stays BU: frontier still huge
+    (False, 5_000, 900, 2_000, False),
+    # BU -> TD: v_f drops below n / beta (1024 / 24 ~ 42.7)
+    (False, 5_000, 42, 2_000, True),
+    # BU boundary: v_f == ceil boundary region — 43 > 42.67 keeps BU
+    (False, 5_000, 43, 2_000, False),
+    # degenerate tail: empty frontier in BU flips TD (0 < n / beta)
+    (False, 0, 0, 0, True),
+    # TD with nothing unexplored: any e_f > 0 flips BU
+    (True, 1, 1, 0, False),
+]
+
+
+@pytest.mark.parametrize("topdown,e_f,v_f,e_u,expected", CASES)
+def test_switch_rule_table(topdown, e_f, v_f, e_u, expected):
+    got = switch_direction(jnp.bool_(topdown), jnp.int32(e_f),
+                           jnp.int32(v_f), jnp.int32(e_u), N, ALPHA, BETA)
+    assert bool(got) == expected, (topdown, e_f, v_f, e_u)
+
+
+def test_switch_rule_vectorised_lanes():
+    """The MS-BFS controller applies the rule elementwise over lanes; the
+    batched answer must equal the row-by-row scalar table."""
+    td = jnp.asarray([c[0] for c in CASES])
+    e_f = jnp.asarray([c[1] for c in CASES], jnp.int32)
+    v_f = jnp.asarray([c[2] for c in CASES], jnp.int32)
+    e_u = jnp.asarray([c[3] for c in CASES], jnp.int32)
+    got = switch_direction(td, e_f, v_f, e_u, N, ALPHA, BETA)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  [c[4] for c in CASES])
+
+
+def test_switch_rule_defaults_match_module_constants():
+    # alpha/beta defaults flow from the module constants (paper config)
+    got = switch_direction(jnp.bool_(True), jnp.int32(1), jnp.int32(1),
+                           jnp.int32(10 ** 6), N)
+    assert bool(got) is True
+    assert ALPHA_DEFAULT == 14.0 and BETA_DEFAULT == 24.0
+
+
+def test_switch_rule_replays_end_to_end_trace():
+    """Feeding the recorded per-layer counters of a real hybrid run back
+    through the rule reproduces the recorded direction sequence —
+    Algorithm 3 is exactly this recurrence."""
+    g = rmat_graph(10, 16, seed=0)
+    root = int(sample_roots(g, 1, seed=1)[0])
+    out = bfs(g, root, "hybrid")
+    nl = int(out.num_layers)
+    dirs = np.asarray(out.trace_dir)[:nl]          # 0 TD, 1 BU
+    e_f = np.asarray(out.trace_ef)[:nl]
+    v_f = np.asarray(out.trace_vf)[:nl]
+    e_u = np.asarray(out.trace_eu)[:nl]
+    topdown = True                                 # layer-0 prior state
+    for i in range(nl):
+        topdown = bool(switch_direction(
+            jnp.bool_(topdown), jnp.int32(e_f[i]), jnp.int32(v_f[i]),
+            jnp.int32(e_u[i]), g.n, ALPHA_DEFAULT, BETA_DEFAULT))
+        assert dirs[i] == (0 if topdown else 1), f"layer {i}"
