@@ -1,16 +1,22 @@
 # Single entry point for CI and future PRs.
 #
-#   make test         tier-1 suite (the ROADMAP verify command)
-#   make bench-smoke  MS-BFS batched-vs-serial TEPS at a small scale
-#   make bench        the same at the paper-protocol scale 14
+#   make test             tier-1 suite (the ROADMAP verify command)
+#   make test-properties  hypothesis MS-BFS property suite, fixed seed /
+#                         bounded examples (derandomized -> reproducible)
+#   make bench-smoke      MS-BFS TEPS curve (R=64/128/256) at a small scale
+#   make bench            the same at the paper-protocol scale 14
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench
+.PHONY: test test-properties bench-smoke bench
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+test-properties:
+	MSBFS_PROP_EXAMPLES=25 $(PYTHON) -m pytest \
+	    tests/test_msbfs_properties.py tests/test_validate.py -q
 
 bench-smoke:
 	$(PYTHON) benchmarks/msbfs_teps.py --scale 10

@@ -1,13 +1,19 @@
-"""MS-BFS aggregate TEPS: batched 64-root sweep vs the serial 64-root loop.
+"""MS-BFS aggregate TEPS: pipelined multi-root sweep vs the serial loop.
 
-The Graph500 protocol answers 64 roots; the serial harness replays one
-compiled executable per root, the batched harness packs all 64 roots into
-uint32 bit-lanes and answers them in ONE traversal sweep
-(``repro.core.msbfs``). The headline is aggregate TEPS — total traversed
-edges over total wall time — i.e. throughput under a 64-query batch, the
-serving axis from ROADMAP.
+The Graph500 protocol answers a set of roots; the serial harness replays
+one compiled executable per root, the batched harness streams ALL roots
+through the pipelined bit-lane engine (``repro.core.msbfs``) in one
+invocation — lanes refill from the pending-root queue mid-sweep, so
+R > 64 pays extra layers, not batch barriers. The headline is aggregate
+TEPS — total traversed edges over total wall time — i.e. throughput under
+an R-query batch, the serving axis from ROADMAP.
+
+Default is the scaling curve R ∈ {64, 128, 256} against the R=64 serial
+baseline (the acceptance axis: pipelined R=256 must clear 3.5x the serial
+baseline); ``--roots N`` switches to a single serial-vs-batched pair at N.
 
   PYTHONPATH=src python benchmarks/msbfs_teps.py --scale 14
+  PYTHONPATH=src python benchmarks/msbfs_teps.py --scale 14 --roots 64
 
 Wall-clock on the CPU container is not comparable to KNC GTEPS; the
 *relative* claim validated here is batched >= serial throughput.
@@ -19,13 +25,23 @@ import argparse
 from repro.graph.generator import rmat_graph
 from repro.graph.graph500 import run_graph500
 
+CURVE_ROOTS = (64, 128, 256)
+
+
+def _print_result(label, res):
+    s = res.summary()
+    print(f"  {label:14s}: aggregate {s['aggregate_teps'] / 1e6:10.2f} "
+          f"MTEPS  (harmonic-mean per-root "
+          f"{s['harmonic_mean_teps'] / 1e6:10.2f} MTEPS, "
+          f"total time {sum(res.times):.3f}s, {s['nroots']} roots)")
+
 
 def run(scale: int = 14, edgefactor: int = 16, num_roots: int = 64,
         mode: str = "hybrid", probe_impl: str = "xla", seed: int = 0,
-        validate: bool = False):
+        validate: bool = False, lanes: int = 64):
     g = rmat_graph(scale, edgefactor, seed)
     print(f"# MS-BFS aggregate TEPS — scale={scale} ef={edgefactor} "
-          f"roots={num_roots} mode={mode}")
+          f"roots={num_roots} mode={mode} lanes={lanes}")
     print(f"  n={g.n:,} vertices, m={g.m:,} directed edges")
 
     results = {}
@@ -33,14 +49,9 @@ def run(scale: int = 14, edgefactor: int = 16, num_roots: int = 64,
         res = run_graph500(scale, edgefactor, mode=mode,
                            num_roots=num_roots, seed=seed, graph=g,
                            probe_impl=probe_impl, validate=validate,
-                           batched=batched)
+                           batched=batched, lanes=lanes)
         results[label] = res
-        s = res.summary()
-        print(f"  {label:8s}: aggregate {s['aggregate_teps'] / 1e6:10.2f} "
-              f"MTEPS  (harmonic-mean per-root "
-              f"{s['harmonic_mean_teps'] / 1e6:10.2f} MTEPS, "
-              f"total time {sum(res.times):.3f}s, "
-              f"{s['nroots']} roots)")
+        _print_result(label, res)
 
     speedup = (results["batched"].aggregate_teps
                / max(results["serial"].aggregate_teps, 1e-12))
@@ -48,11 +59,48 @@ def run(scale: int = 14, edgefactor: int = 16, num_roots: int = 64,
     return results
 
 
+def run_curve(scale: int = 14, edgefactor: int = 16, mode: str = "hybrid",
+              probe_impl: str = "xla", seed: int = 0,
+              validate: bool = False, lanes: int = 64,
+              roots_curve=CURVE_ROOTS):
+    """Scaling curve: serial baseline at R=64, pipelined engine at each R.
+
+    Every batched point is ONE engine invocation; the R=256 point must
+    clear 3.5x the serial baseline (refill overlap keeps lanes busy, so
+    aggregate TEPS should not degrade as R grows past the lane pool).
+    """
+    g = rmat_graph(scale, edgefactor, seed)
+    print(f"# MS-BFS TEPS scaling curve — scale={scale} ef={edgefactor} "
+          f"mode={mode} lanes={lanes} R={list(roots_curve)}")
+    print(f"  n={g.n:,} vertices, m={g.m:,} directed edges")
+
+    baseline = run_graph500(scale, edgefactor, mode=mode,
+                            num_roots=roots_curve[0], seed=seed, graph=g,
+                            probe_impl=probe_impl, validate=validate,
+                            batched=False)
+    _print_result(f"serial R={roots_curve[0]}", baseline)
+    base_teps = max(baseline.aggregate_teps, 1e-12)
+
+    curve = {"serial": baseline}
+    for r in roots_curve:
+        res = run_graph500(scale, edgefactor, mode=mode, num_roots=r,
+                           seed=seed, graph=g, probe_impl=probe_impl,
+                           validate=validate, batched=True, lanes=lanes)
+        curve[r] = res
+        _print_result(f"batched R={r}", res)
+        print(f"    -> {res.aggregate_teps / base_teps:6.2f}x the "
+              f"R={roots_curve[0]} serial baseline")
+    return curve
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scale", type=int, default=14)
     ap.add_argument("--edgefactor", type=int, default=16)
-    ap.add_argument("--roots", type=int, default=64)
+    ap.add_argument("--roots", type=int, default=None,
+                    help="single-R mode; default runs the R=64/128/256 curve")
+    ap.add_argument("--lanes", type=int, default=64,
+                    help="bit-lane pool size of the pipelined engine")
     ap.add_argument("--mode", default="hybrid",
                     choices=("hybrid", "topdown", "bottomup_simd"))
     ap.add_argument("--probe-impl", default="xla",
@@ -60,9 +108,15 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--validate", action="store_true")
     args = ap.parse_args()
-    run(scale=args.scale, edgefactor=args.edgefactor, num_roots=args.roots,
-        mode=args.mode, probe_impl=args.probe_impl, seed=args.seed,
-        validate=args.validate)
+    if args.roots is None:
+        run_curve(scale=args.scale, edgefactor=args.edgefactor,
+                  mode=args.mode, probe_impl=args.probe_impl,
+                  seed=args.seed, validate=args.validate, lanes=args.lanes)
+    else:
+        run(scale=args.scale, edgefactor=args.edgefactor,
+            num_roots=args.roots, mode=args.mode,
+            probe_impl=args.probe_impl, seed=args.seed,
+            validate=args.validate, lanes=args.lanes)
 
 
 if __name__ == "__main__":

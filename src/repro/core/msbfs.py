@@ -2,9 +2,25 @@
 
 The paper vectorises ONE frontier across SIMD lanes; this module lifts the
 same insight one level up (Then et al., "The More the Merrier"; SlimSell):
-up to ``MAX_LANES`` (64) independent BFS traversals run concurrently by
-packing per-root state into uint32 *lane words* — bit ``r & 31`` of word
-``r >> 5`` at row ``v`` means "root r's traversal has reached v".
+independent BFS traversals run concurrently by packing per-root state into
+uint32 *lane words* — bit ``r & 31`` of word ``r >> 5`` at row ``v`` means
+"root r's traversal has reached v".
+
+Two engines share the packed step formulations:
+
+* ``msbfs`` — one batch of R <= ``MAX_LANES`` roots, a single
+  ``lax.while_loop`` sweep (PR 1).
+* the *pipelined* engine (``msbfs_pipelined`` and the
+  ``msbfs_engine_*`` stepping API) — arbitrary root counts streamed
+  through a fixed pool of ``lanes`` bit-lanes. Roots live in a pending
+  queue; the moment a lane's traversal finishes (frontier empty or the
+  MAX_TRACE cap), its per-root results are flushed to the output slot and
+  the lane is *immediately refilled* from the queue — no barrier between
+  word-batches, so deep lanes never stall shallow ones. ``W`` (lane words
+  per vertex) derives from the active lane pool, not a hard-coded
+  ``MAX_LANES // 32``. New roots may be enqueued mid-sweep
+  (``msbfs_engine_enqueue``) — the serving entry point
+  ``repro.launch.serve_bfs`` drives exactly that loop.
 
 State layout (all static shapes, jit-friendly):
   frontier : uint32[n, W]   W = ceil(num_roots / 32) lane words per vertex
@@ -186,6 +202,45 @@ def _lane_counters(g: CSRGraph, frontier_b: jnp.ndarray,
     return e_f, v_f, e_u
 
 
+def _select_direction(mode: str, topdown_prev: jnp.ndarray, e_f, v_f, e_u,
+                      n: int, alpha: float, beta: float,
+                      lanes: int) -> jnp.ndarray:
+    """Per-lane TD/BU decision for one layer — shared by both engines."""
+    if mode == "topdown":
+        return jnp.ones((lanes,), jnp.bool_)
+    if mode == "bottomup":
+        return jnp.zeros((lanes,), jnp.bool_)
+    return switch_direction(topdown_prev, e_f, v_f, e_u, n, alpha, beta)
+
+
+def _dispatch_packed_step(g: CSRGraph, frontier: jnp.ndarray,
+                          visited: jnp.ndarray, td_sel: jnp.ndarray,
+                          bu_sel: jnp.ndarray, mode: str, max_pos: int,
+                          probe_impl: str) -> jnp.ndarray:
+    """Run the packed TD/BU step(s) for one layer under the lane selectors
+    — shared by the single-batch sweep and the pipelined engine (the two
+    must advance frontiers bit-for-bit identically)."""
+    if mode == "topdown":
+        return _topdown_packed_step(g, frontier, visited, td_sel)
+    if mode == "bottomup":
+        return _bottomup_packed_step(g, frontier, visited, bu_sel,
+                                     max_pos, probe_impl)
+    # middle layers usually have EVERY lane on one side — cond-skip the
+    # other direction's O(m)/O(n*max_pos) work (the packed analog of the
+    # serial controller's lax.cond)
+    zero = jnp.zeros_like(frontier)
+    new_td = jax.lax.cond(
+        jnp.any(td_sel != 0),
+        lambda: _topdown_packed_step(g, frontier, visited, td_sel),
+        lambda: zero)
+    new_bu = jax.lax.cond(
+        jnp.any(bu_sel != 0),
+        lambda: _bottomup_packed_step(g, frontier, visited, bu_sel,
+                                      max_pos, probe_impl),
+        lambda: zero)
+    return new_td | new_bu
+
+
 def _derive_parents(g: CSRGraph, depth: jnp.ndarray, roots: jnp.ndarray,
                     lane_chunk: int = 16) -> jnp.ndarray:
     """parent[v, r] = min-id neighbour of v one level up in lane r.
@@ -195,6 +250,8 @@ def _derive_parents(g: CSRGraph, depth: jnp.ndarray, roots: jnp.ndarray,
     """
     n, m = g.n, g.m
     num_roots = roots.shape[0]
+    if num_roots == 0:
+        return jnp.zeros((n, 0), jnp.int32)
     src, col = g.src_idx, g.col_idx
     outs = []
     for lo in range(0, num_roots, lane_chunk):
@@ -227,7 +284,8 @@ def msbfs(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",
     num_roots = roots.shape[0]
     if num_roots > MAX_LANES:
         raise ValueError(f"at most {MAX_LANES} roots per batch, "
-                         f"got {num_roots}")
+                         f"got {num_roots} — use msbfs_pipelined for "
+                         f"arbitrary root counts")
     w = num_lane_words(num_roots)
     lane_ids = jnp.arange(num_roots, dtype=jnp.int32)
     root_onehot = roots[None, :] == jnp.arange(n, dtype=jnp.int32)[:, None]
@@ -241,53 +299,31 @@ def msbfs(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",
         frontier_b = unpack_lanes(s.frontier, num_roots)
         visited_b = unpack_lanes(s.visited, num_roots)
         e_f, v_f, e_u = _lane_counters(g, frontier_b, visited_b)
-        if mode == "topdown":
-            topdown = jnp.ones((num_roots,), jnp.bool_)
-        elif mode == "bottomup":
-            topdown = jnp.zeros((num_roots,), jnp.bool_)
-        else:
-            topdown = switch_direction(s.topdown, e_f, v_f, e_u, n,
-                                       alpha, beta)
+        topdown = _select_direction(mode, s.topdown, e_f, v_f, e_u, n,
+                                    alpha, beta, num_roots)
 
         # dead lanes (empty frontier) leave BOTH selectors: the switch rule
         # flips them to TD (v_f = 0 < n/beta), which would otherwise keep
-        # td_sel nonzero forever and defeat the cond-skip below
+        # td_sel nonzero forever and defeat the cond-skip in the dispatch
         live = v_f > 0
         td_sel = pack_lanes(topdown & live) & lane_mask      # uint32[W]
         bu_sel = pack_lanes(~topdown & live) & lane_mask
-        if mode == "topdown":
-            new = _topdown_packed_step(g, s.frontier, s.visited, td_sel)
-        elif mode == "bottomup":
-            new = _bottomup_packed_step(g, s.frontier, s.visited, bu_sel,
-                                        max_pos, probe_impl)
-        else:
-            # middle layers usually have EVERY lane on one side — cond-skip
-            # the other direction's O(m)/O(n*max_pos) work (the packed
-            # analog of the serial controller's lax.cond)
-            zero = jnp.zeros_like(s.frontier)
-            new_td = jax.lax.cond(
-                jnp.any(td_sel != 0),
-                lambda: _topdown_packed_step(g, s.frontier, s.visited,
-                                             td_sel),
-                lambda: zero)
-            new_bu = jax.lax.cond(
-                jnp.any(bu_sel != 0),
-                lambda: _bottomup_packed_step(g, s.frontier, s.visited,
-                                              bu_sel, max_pos, probe_impl),
-                lambda: zero)
-            new = new_td | new_bu
+        new = _dispatch_packed_step(g, s.frontier, s.visited, td_sel,
+                                    bu_sel, mode, max_pos, probe_impl)
 
         depth2 = jnp.where(unpack_lanes(new, num_roots), s.layer + 1, s.depth)
         i = s.layer
-        lane_live = v_f > 0
+        # dead lanes record nothing (-1 dir, zero counters) — the rows a
+        # finished lane never ran must read identically to the serial
+        # trace and to the pipelined engine, which retires the lane
         return _State(
             frontier=new, visited=s.visited | new, depth=depth2,
             topdown=topdown, layer=i + 1,
             trace_dir=s.trace_dir.at[i].set(
-                jnp.where(lane_live, jnp.where(topdown, 0, 1), -1)),
-            trace_vf=s.trace_vf.at[i].set(v_f),
-            trace_ef=s.trace_ef.at[i].set(e_f),
-            trace_eu=s.trace_eu.at[i].set(e_u),
+                jnp.where(live, jnp.where(topdown, 0, 1), -1)),
+            trace_vf=s.trace_vf.at[i].set(jnp.where(live, v_f, 0)),
+            trace_ef=s.trace_ef.at[i].set(jnp.where(live, e_f, 0)),
+            trace_eu=s.trace_eu.at[i].set(jnp.where(live, e_u, 0)),
         )
 
     init = _State(
@@ -305,9 +341,305 @@ def msbfs(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",
     visited_b = unpack_lanes(s.visited, num_roots)
     deg = g.deg.astype(jnp.int32)[:, None]
     edges = jnp.sum(jnp.where(visited_b, deg, 0), axis=0)
-    num_layers = jnp.max(s.depth, axis=0) + 1
+    # a cap-terminated lane ran exactly MAX_TRACE layers (the serial
+    # controller's loop bound and the pipelined engine's flush agree)
+    num_layers = jnp.minimum(jnp.max(s.depth, axis=0) + 1, MAX_TRACE)
     parent = _derive_parents(g, s.depth, roots)
     return MSBFSResult(parent=parent, depth=s.depth, num_layers=num_layers,
                        edges_traversed=edges, trace_dir=s.trace_dir,
-                       trace_vf=s.trace_vf, trace_ef=s.trace_ef,
-                       trace_eu=s.trace_eu)
+                       trace_vf=s.trace_vf, trace_eu=s.trace_eu,
+                       trace_ef=s.trace_ef)
+
+
+# ---------------------------------------------------------------------------
+# Pipelined engine: arbitrary root counts through a fixed bit-lane pool.
+#
+# State invariants (maintained by _refill / the step body):
+#   * lane_qidx[l] < capacity  <=>  lane l is serving queue slot lane_qidx[l];
+#     idle lanes hold lane_qidx == capacity and have all-zero frontier /
+#     visited bits and an all -1 depth column.
+#   * queue[:queued] holds enqueued roots; queue slots [next_root, queued)
+#     are pending. Every claimed slot is served by exactly one lane until
+#     its traversal finishes, then flushed to out_* column lane_qidx[l].
+#   * out_layers[q] > 0  <=>  query q has been answered (flushed).
+# Output arrays carry one trailing *trash* column (index == capacity) that
+# absorbs the per-layer scatter of non-finished lanes, keeping the flush a
+# single static-shape write.
+# ---------------------------------------------------------------------------
+
+
+class PipelineState(NamedTuple):
+    frontier: jnp.ndarray        # uint32[n, W]  packed lane frontiers
+    visited: jnp.ndarray         # uint32[n, W]
+    depth: jnp.ndarray           # int32[n, L]   active-lane depths (-1 unreached)
+    lane_layer: jnp.ndarray      # int32[L]      steps run for the lane's root
+    lane_qidx: jnp.ndarray       # int32[L]      queue slot served; capacity = idle
+    topdown: jnp.ndarray         # bool[L]
+    queue: jnp.ndarray           # int32[capacity] enqueued root ids
+    queued: jnp.ndarray          # int32 scalar  number of roots enqueued
+    next_root: jnp.ndarray       # int32 scalar  next queue slot to claim
+    sweep_layers: jnp.ndarray    # int32 scalar  total engine steps run
+    out_depth: jnp.ndarray       # int32[n, capacity+1]
+    out_edges: jnp.ndarray       # int32[capacity+1]
+    out_layers: jnp.ndarray      # int32[capacity+1]  0 = unanswered
+    trace_dir: jnp.ndarray       # int32[MAX_TRACE, capacity+1]
+    trace_vf: jnp.ndarray
+    trace_ef: jnp.ndarray
+    trace_eu: jnp.ndarray
+
+    @property
+    def num_lanes(self) -> int:
+        return self.lane_qidx.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.queue.shape[0]
+
+
+def msbfs_engine_init(g: CSRGraph, capacity: int,
+                      lanes: int = MAX_LANES) -> PipelineState:
+    """Fresh engine: all lanes idle, empty root queue of ``capacity`` slots.
+
+    ``lanes`` is the concurrency (bit-lane pool size); ``W`` lane words per
+    vertex derive from it. A capacity larger than ``lanes`` is the whole
+    point: excess roots wait in the queue and stream into lanes as they
+    free up.
+    """
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
+    if lanes < 1:
+        raise ValueError(f"lanes must be >= 1, got {lanes}")
+    n = g.n
+    w = num_lane_words(lanes)
+    cap = capacity
+    return PipelineState(
+        frontier=jnp.zeros((n, w), jnp.uint32),
+        visited=jnp.zeros((n, w), jnp.uint32),
+        depth=jnp.full((n, lanes), -1, jnp.int32),
+        lane_layer=jnp.zeros((lanes,), jnp.int32),
+        lane_qidx=jnp.full((lanes,), cap, jnp.int32),
+        topdown=jnp.ones((lanes,), jnp.bool_),
+        queue=jnp.zeros((cap,), jnp.int32),
+        queued=jnp.int32(0),
+        next_root=jnp.int32(0),
+        sweep_layers=jnp.int32(0),
+        out_depth=jnp.full((n, cap + 1), -1, jnp.int32),
+        out_edges=jnp.zeros((cap + 1,), jnp.int32),
+        out_layers=jnp.zeros((cap + 1,), jnp.int32),
+        trace_dir=jnp.full((MAX_TRACE, cap + 1), -1, jnp.int32),
+        trace_vf=jnp.zeros((MAX_TRACE, cap + 1), jnp.int32),
+        trace_ef=jnp.zeros((MAX_TRACE, cap + 1), jnp.int32),
+        trace_eu=jnp.zeros((MAX_TRACE, cap + 1), jnp.int32),
+    )
+
+
+def msbfs_engine_enqueue(state: PipelineState,
+                         roots: jnp.ndarray) -> PipelineState:
+    """Append roots to the pending queue (host helper, mid-sweep safe).
+
+    The roots land in idle lanes on the next ``msbfs_engine_step`` — the
+    streaming-root path: a sweep in flight keeps absorbing new queries.
+    """
+    roots = jnp.asarray(roots, jnp.int32).reshape(-1)
+    k = roots.shape[0]
+    queued = int(state.queued)
+    if queued + k > state.capacity:
+        raise ValueError(
+            f"queue overflow: {queued} queued + {k} new > capacity "
+            f"{state.capacity}")
+    queue = jax.lax.dynamic_update_slice(state.queue, roots,
+                                         (state.queued,))
+    return state._replace(queue=queue, queued=state.queued + jnp.int32(k))
+
+
+def msbfs_engine_idle(state: PipelineState) -> bool:
+    """True when no lane is active and no enqueued root is pending."""
+    return (int(state.next_root) >= int(state.queued)
+            and not bool(jnp.any(state.lane_qidx < state.capacity)))
+
+
+def _refill(g: CSRGraph, s: PipelineState, topdown_init: bool) -> PipelineState:
+    """Claim pending queue slots for idle lanes and seat their roots.
+
+    The O(n * lanes) seat-building is lax.cond-skipped in the steady state
+    (no idle lane or no pending root — e.g. the whole deep tail of a
+    sweep), the same pattern as the TD/BU dispatch."""
+    n = g.n
+    cap = s.capacity
+
+    def do_refill(s: PipelineState) -> PipelineState:
+        idle = s.lane_qidx >= cap
+        rank = jnp.cumsum(idle.astype(jnp.int32)) - 1
+        cand = s.next_root + rank
+        claim = idle & (cand < s.queued)
+        root = s.queue[jnp.clip(cand, 0, cap - 1)]
+        onehot = claim[None, :] & (root[None, :]
+                                   == jnp.arange(n, dtype=jnp.int32)[:, None])
+        fresh = pack_lanes(onehot)                            # uint32[n, W]
+        return s._replace(
+            frontier=s.frontier | fresh,
+            visited=s.visited | fresh,
+            depth=jnp.where(claim[None, :],
+                            jnp.where(onehot, 0, -1), s.depth),
+            lane_layer=jnp.where(claim, 0, s.lane_layer),
+            lane_qidx=jnp.where(claim, cand, s.lane_qidx),
+            topdown=jnp.where(claim, topdown_init, s.topdown),
+            next_root=s.next_root + jnp.sum(claim, dtype=jnp.int32),
+        )
+
+    needed = jnp.any(s.lane_qidx >= cap) & (s.next_root < s.queued)
+    return jax.lax.cond(needed, do_refill, lambda s: s, s)
+
+
+def _pipeline_body(g: CSRGraph, s: PipelineState, mode: str, alpha: float,
+                   beta: float, max_pos: int,
+                   probe_impl: str) -> PipelineState:
+    """One engine step: refill idle lanes, advance one layer, flush finished
+    lanes to their output slots."""
+    n = g.n
+    lanes = s.lane_qidx.shape[0]
+    cap = s.queue.shape[0]
+    s = _refill(g, s, mode != "bottomup")
+
+    active = s.lane_qidx < cap
+    frontier_b = unpack_lanes(s.frontier, lanes)
+    visited_b = unpack_lanes(s.visited, lanes)
+    e_f, v_f, e_u = _lane_counters(g, frontier_b, visited_b)
+    topdown = _select_direction(mode, s.topdown, e_f, v_f, e_u, n,
+                                alpha, beta, lanes)
+
+    live = active & (v_f > 0)
+    td_sel = pack_lanes(topdown & live)                       # uint32[W]
+    bu_sel = pack_lanes(~topdown & live)
+
+    # per-root trace rows are indexed by the lane's OWN layer counter and
+    # its queue slot, so a root's trace replays its serial run regardless
+    # of which lane served it or when it was claimed
+    tr_row = jnp.clip(s.lane_layer, 0, MAX_TRACE - 1)
+    tr_col = jnp.where(active, s.lane_qidx, cap)
+    dir_vals = jnp.where(live, jnp.where(topdown, 0, 1), -1)
+    trace_dir = s.trace_dir.at[tr_row, tr_col].set(dir_vals)
+    trace_vf = s.trace_vf.at[tr_row, tr_col].set(v_f)
+    trace_ef = s.trace_ef.at[tr_row, tr_col].set(e_f)
+    trace_eu = s.trace_eu.at[tr_row, tr_col].set(e_u)
+
+    new = _dispatch_packed_step(g, s.frontier, s.visited, td_sel, bu_sel,
+                                mode, max_pos, probe_impl)
+
+    new_b = unpack_lanes(new, lanes)
+    visited2 = s.visited | new
+    visited2_b = visited_b | new_b
+    lane_layer2 = s.lane_layer + active.astype(jnp.int32)
+    depth2 = jnp.where(new_b, lane_layer2[None, :], s.depth)
+
+    # finish = frontier drained OR per-lane layer cap (mirrors the serial
+    # while-loop bound, and guarantees the drain loop terminates)
+    finished = active & (~new_b.any(axis=0) | (lane_layer2 >= MAX_TRACE))
+
+    deg = g.deg.astype(jnp.int32)[:, None]
+    edges_l = jnp.sum(jnp.where(visited2_b, deg, 0), axis=0)
+    fcol = jnp.where(finished, s.lane_qidx, cap)
+    out_depth = s.out_depth.at[:, fcol].set(depth2)
+    out_edges = s.out_edges.at[fcol].set(edges_l)
+    out_layers = s.out_layers.at[fcol].set(lane_layer2)
+
+    # retire finished lanes: zero their packed bits so _refill can seat a
+    # fresh root into the slot on the very next step
+    clear = pack_lanes(finished)                              # uint32[W]
+    return s._replace(
+        frontier=new & ~clear,
+        visited=visited2 & ~clear,
+        depth=jnp.where(finished[None, :], -1, depth2),
+        lane_layer=jnp.where(finished, 0, lane_layer2),
+        lane_qidx=jnp.where(finished, cap, s.lane_qidx),
+        topdown=topdown,
+        sweep_layers=s.sweep_layers + 1,
+        out_depth=out_depth, out_edges=out_edges, out_layers=out_layers,
+        trace_dir=trace_dir, trace_vf=trace_vf, trace_ef=trace_ef,
+        trace_eu=trace_eu,
+    )
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4, 5, 6))
+def msbfs_engine_step(g: CSRGraph, state: PipelineState, mode: str = "hybrid",
+                      alpha: float = ALPHA_DEFAULT, beta: float = BETA_DEFAULT,
+                      max_pos: int = 8,
+                      probe_impl: str = "xla") -> PipelineState:
+    """Advance the pipelined engine by one traversal layer (streaming API).
+
+    Compiles once per (graph shape, lanes, capacity, mode); the serving loop
+    interleaves ``msbfs_engine_enqueue`` calls between steps to feed idle
+    lanes mid-sweep.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    return _pipeline_body(g, state, mode, alpha, beta, max_pos, probe_impl)
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4, 5, 6))
+def _drain(g: CSRGraph, state: PipelineState, mode: str, alpha: float,
+           beta: float, max_pos: int, probe_impl: str) -> PipelineState:
+    cap = state.queue.shape[0]
+
+    def cond_fn(s: PipelineState):
+        return (s.next_root < s.queued) | jnp.any(s.lane_qidx < cap)
+
+    def body_fn(s: PipelineState):
+        return _pipeline_body(g, s, mode, alpha, beta, max_pos, probe_impl)
+
+    return jax.lax.while_loop(cond_fn, body_fn, state)
+
+
+def msbfs_engine_drain(g: CSRGraph, state: PipelineState,
+                       mode: str = "hybrid", alpha: float = ALPHA_DEFAULT,
+                       beta: float = BETA_DEFAULT, max_pos: int = 8,
+                       probe_impl: str = "xla") -> PipelineState:
+    """Step the engine until every enqueued root has been answered."""
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    return _drain(g, state, mode, alpha, beta, max_pos, probe_impl)
+
+
+def msbfs_engine_result(g: CSRGraph, state: PipelineState) -> MSBFSResult:
+    """Assemble an ``MSBFSResult`` over the answered queue slots.
+
+    Columns of unanswered slots (``out_layers == 0``) hold init values
+    (-1 depths); callers normally drain first.
+    """
+    r = int(state.queued)
+    depth = state.out_depth[:, :r]
+    roots = state.queue[:r]
+    parent = _derive_parents(g, depth, roots)
+    return MSBFSResult(
+        parent=parent, depth=depth, num_layers=state.out_layers[:r],
+        edges_traversed=state.out_edges[:r],
+        trace_dir=state.trace_dir[:, :r], trace_vf=state.trace_vf[:, :r],
+        trace_ef=state.trace_ef[:, :r], trace_eu=state.trace_eu[:, :r])
+
+
+def msbfs_pipelined(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",
+                    alpha: float = ALPHA_DEFAULT, beta: float = BETA_DEFAULT,
+                    max_pos: int = 8, probe_impl: str = "xla",
+                    lanes: int = MAX_LANES) -> MSBFSResult:
+    """Answer an arbitrary number of roots in ONE pipelined engine sweep.
+
+    Splits R > ``lanes`` roots across bit-lane word-batches WITHOUT batch
+    barriers: each finished lane refills from the pending-root queue on the
+    next layer, so the sweep's critical path is set by total traversal
+    work, not by the deepest root of each 64-root batch. With R <= lanes
+    the lane pool shrinks to ``ceil32(R)`` lanes and this reduces to the
+    single-batch ``msbfs`` sweep (same packed steps, same results).
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    roots = jnp.asarray(roots, jnp.int32).reshape(-1)
+    num_roots = roots.shape[0]
+    if num_roots < 1:
+        raise ValueError("need at least one root")
+    # W derives from the ACTIVE batch: small R never pays for idle words
+    lanes = max(1, min(lanes, LANE_WORD_BITS * num_lane_words(num_roots)))
+    state = msbfs_engine_init(g, capacity=num_roots, lanes=lanes)
+    state = msbfs_engine_enqueue(state, roots)
+    state = msbfs_engine_drain(g, state, mode, alpha, beta, max_pos,
+                               probe_impl)
+    return msbfs_engine_result(g, state)

@@ -5,10 +5,16 @@ roots (degree>0, as the reference code does), run BFS per root with the
 compiled executable, collect per-root wall time and TEPS, and report the
 harmonic mean (the paper's headline number) plus min/max/mean.
 
-``batched=True`` answers all 64 roots in ONE traversal sweep via the
-bit-packed MS-BFS subsystem (``repro.core.msbfs``): per-root wall time is
-then the shared sweep time, and ``aggregate_teps`` (total edges over total
-wall time) is the number to compare against the serial loop.
+``batched=True`` answers ALL roots — ``num_roots`` is no longer clamped to
+64 — in ONE invocation of the pipelined MS-BFS engine
+(``repro.core.msbfs.msbfs_pipelined``): roots beyond the ``lanes`` bit-lane
+pool wait in the engine's pending queue and refill lanes the moment a
+traversal finishes, so there is no per-64-batch barrier. Per-root wall time
+is the shared sweep time, and ``aggregate_teps`` (total edges over total
+wall time) is the number to compare against the serial loop; because
+``times`` holds the single pipelined sweep time, the refill overlap is
+priced in automatically — idle-lane time never inflates the denominator
+the way summing per-batch sweep times would.
 
 TEPS counts the *undirected* edges of the traversed component
 (sum of degrees of reached vertices / 2), per the Graph500 spec.
@@ -24,7 +30,7 @@ import numpy as np
 
 from repro.core.csr import CSRGraph, to_numpy_adj
 from repro.core.hybrid import bfs
-from repro.core.msbfs import MAX_LANES, msbfs
+from repro.core.msbfs import MAX_LANES, msbfs_pipelined
 from repro.graph.generator import rmat_graph, sample_roots
 from repro.graph.validate import validate_bfs_tree
 
@@ -40,6 +46,7 @@ class Graph500Result:
     edgefactor: int
     mode: str
     batched: bool = False
+    lanes: int = 0               # bit-lane pool size of the batched engine
     teps: list[float] = field(default_factory=list)
     times: list[float] = field(default_factory=list)
     traversed: list[int] = field(default_factory=list)
@@ -59,7 +66,7 @@ class Graph500Result:
     def summary(self) -> dict:
         t = np.asarray(self.teps)
         return dict(scale=self.scale, edgefactor=self.edgefactor,
-                    mode=self.mode, batched=self.batched,
+                    mode=self.mode, batched=self.batched, lanes=self.lanes,
                     nroots=len(self.traversed),
                     harmonic_mean_teps=self.harmonic_mean_teps,
                     aggregate_teps=self.aggregate_teps,
@@ -75,7 +82,8 @@ def run_graph500(scale: int, edgefactor: int, mode: str = "hybrid",
                  probe_impl: str = "xla", warmup: bool = True,
                  skip_empty_fallback: bool = True, td_impl: str = "edge",
                  graph: CSRGraph | None = None,
-                 batched: bool = False) -> Graph500Result:
+                 batched: bool = False,
+                 lanes: int = MAX_LANES) -> Graph500Result:
     g = graph if graph is not None else rmat_graph(scale, edgefactor, seed)
     roots = sample_roots(g, num_roots, seed=seed + 1)
     if batched:
@@ -84,7 +92,7 @@ def run_graph500(scale: int, edgefactor: int, mode: str = "hybrid",
                 "batched=True does not support td_impl/skip_empty_fallback "
                 "(the MS-BFS sweep has its own step formulations)")
         return _run_batched(g, roots, scale, edgefactor, mode, alpha, beta,
-                            max_pos, probe_impl, warmup, validate)
+                            max_pos, probe_impl, warmup, validate, lanes)
     res = Graph500Result(scale=scale, edgefactor=edgefactor, mode=mode)
 
     run = lambda r: bfs(g, r, mode, alpha, beta, max_pos, probe_impl,
@@ -109,9 +117,13 @@ def run_graph500(scale: int, edgefactor: int, mode: str = "hybrid",
 
 def _run_batched(g: CSRGraph, roots: np.ndarray, scale: int, edgefactor: int,
                  mode: str, alpha: float, beta: float, max_pos: int,
-                 probe_impl: str, warmup: bool,
-                 validate: bool) -> Graph500Result:
-    """All roots in one MS-BFS sweep, MAX_LANES (64) per batch.
+                 probe_impl: str, warmup: bool, validate: bool,
+                 lanes: int) -> Graph500Result:
+    """ALL roots in one pipelined MS-BFS engine invocation.
+
+    Roots stream through a pool of ``lanes`` bit-lanes: a finished lane is
+    refilled from the pending queue on the next layer, so R > lanes costs
+    extra traversal layers but no batch barrier and no extra compilation.
 
     The result's ``mode`` records the MS-BFS controller actually executed
     (there is no packed nosimd variant — comparing a serial ``*_nosimd``
@@ -119,26 +131,25 @@ def _run_batched(g: CSRGraph, roots: np.ndarray, scale: int, edgefactor: int,
     """
     msbfs_mode = _BATCHED_MODE[mode]
     res = Graph500Result(scale=scale, edgefactor=edgefactor,
-                         mode=msbfs_mode, batched=True)
-    rp, ci = (to_numpy_adj(g) if validate else (None, None))
-    for lo in range(0, len(roots), MAX_LANES):
-        batch = jnp.asarray(roots[lo:lo + MAX_LANES], dtype=jnp.int32)
-        run = lambda: msbfs(g, batch, msbfs_mode, alpha, beta, max_pos,
-                            probe_impl)
-        if warmup:
-            jax.block_until_ready(run())  # compile once per batch shape
-        t0 = time.perf_counter()
-        out = run()
-        jax.block_until_ready(out.parent)
-        dt = time.perf_counter() - t0
-        edges = np.asarray(out.edges_traversed) // 2
-        res.times.append(dt)
-        res.traversed.extend(int(e) for e in edges)
-        # per-root TEPS against the shared sweep time (the sweep answers
-        # every lane at once); aggregate_teps is the headline comparison
-        res.teps.extend(float(e) / dt if dt > 0 else 0.0 for e in edges)
-        if validate:
-            parent = np.asarray(out.parent)
-            for r_i, root in enumerate(roots[lo:lo + MAX_LANES]):
-                validate_bfs_tree(rp, ci, parent[:, r_i], int(root))
+                         mode=msbfs_mode, batched=True, lanes=lanes)
+    rp_ci = to_numpy_adj(g) if validate else None
+    batch = jnp.asarray(roots, dtype=jnp.int32)
+    run = lambda: msbfs_pipelined(g, batch, msbfs_mode, alpha, beta,
+                                  max_pos, probe_impl, lanes)
+    if warmup:
+        jax.block_until_ready(run())  # compile once per (shape, R, lanes)
+    t0 = time.perf_counter()
+    out = run()
+    jax.block_until_ready(out.parent)
+    dt = time.perf_counter() - t0
+    edges = np.asarray(out.edges_traversed) // 2
+    res.times.append(dt)
+    res.traversed.extend(int(e) for e in edges)
+    # per-root TEPS against the shared sweep time (the engine answers every
+    # query within the one pipelined sweep); aggregate_teps is the headline
+    res.teps.extend(float(e) / dt if dt > 0 else 0.0 for e in edges)
+    if validate:
+        parent = np.asarray(out.parent)
+        for r_i, root in enumerate(roots):
+            validate_bfs_tree(rp_ci[0], rp_ci[1], parent[:, r_i], int(root))
     return res

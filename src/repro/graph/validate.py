@@ -18,12 +18,18 @@ class ValidationError(AssertionError):
     pass
 
 
-def _edges_exist(row_ptr, col_idx, u, v) -> np.ndarray:
-    """Vectorised membership test: is v[i] in adj(u[i])?
+# Largest n for which the dense key src*n+dst stays inside int64:
+# max key is n*n - 1, so n <= floor(sqrt(2**63 - 1)). Beyond that the key
+# multiplication wraps SILENTLY (numpy int64 overflow) and membership
+# tests return garbage — fuzzed/synthetic graphs with huge sparse id
+# spaces must take the per-row bisect path instead.
+_DENSE_KEY_N_MAX = 3_037_000_499
 
-    CSR rows are sorted by neighbour id, so the global key src*n+dst is
-    globally sorted -> one searchsorted answers all queries.
-    """
+
+def _edges_exist_dense_key(row_ptr, col_idx, u, v) -> np.ndarray:
+    """CSR rows are sorted by neighbour id, so the global key src*n+dst is
+    globally sorted -> one searchsorted answers all queries. Only valid
+    for n <= _DENSE_KEY_N_MAX (key must fit int64)."""
     n = len(row_ptr) - 1
     src = np.repeat(np.arange(n, dtype=np.int64), np.diff(row_ptr))
     keys = src * n + col_idx.astype(np.int64)
@@ -31,6 +37,36 @@ def _edges_exist(row_ptr, col_idx, u, v) -> np.ndarray:
     pos = np.searchsorted(keys, q)
     pos = np.clip(pos, 0, len(keys) - 1)
     return keys[pos] == q
+
+
+def _edges_exist_bisect(row_ptr, col_idx, u, v) -> np.ndarray:
+    """Overflow-safe membership: vectorised lower_bound of v[i] within
+    row u[i]'s sorted adjacency slice — no n-dependent key arithmetic."""
+    m = len(col_idx)
+    if m == 0:
+        return np.zeros(len(u), dtype=bool)
+    lo = row_ptr[u].astype(np.int64)
+    end = row_ptr[u.astype(np.int64) + 1].astype(np.int64)
+    hi = end.copy()
+    v64 = v.astype(np.int64)
+    while True:
+        live = lo < hi
+        if not live.any():
+            break
+        mid = (lo + hi) >> 1
+        midv = col_idx[np.clip(mid, 0, max(m - 1, 0))].astype(np.int64)
+        go_right = live & (midv < v64)
+        lo = np.where(go_right, mid + 1, lo)
+        hi = np.where(live & ~go_right, mid, hi)
+    return (lo < end) & (col_idx[np.clip(lo, 0, max(m - 1, 0))] == v64)
+
+
+def _edges_exist(row_ptr, col_idx, u, v) -> np.ndarray:
+    """Vectorised membership test: is v[i] in adj(u[i])?"""
+    n = len(row_ptr) - 1
+    if n <= _DENSE_KEY_N_MAX:
+        return _edges_exist_dense_key(row_ptr, col_idx, u, v)
+    return _edges_exist_bisect(row_ptr, col_idx, u, v)
 
 
 def depths_from_parents(parent: np.ndarray, root: int,

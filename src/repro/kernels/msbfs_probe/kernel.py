@@ -3,19 +3,26 @@
 The single-source probe (``bottom_up_probe``) tests ONE frontier bit per
 gathered neighbour; here each gather pulls a whole uint32 *lane word* — 32
 concurrent traversals answered by one load — and accumulates with bitwise
-OR instead of a select. One kernel invocation handles one word plane
-(lane words for roots [32w, 32w+32)); the ops wrapper loops the (static,
-<= 2) planes.
+OR instead of a select. The lane-word count ``W`` is a GRID dimension, not
+a host loop: one ``pallas_call`` answers every word plane (lane words for
+roots [32w, 32w+32)), so the pipelined engine's wider lane pools (W > 2)
+cost extra grid steps, not extra launches.
 
-Per probe round ``pos``:
+Per probe round ``pos`` (within one word plane):
 
   live = ((need & ~acc) != 0) & (pos < deg)   # lanes still unserved
   vadj = col_idx[start + pos]                 # LoadAdj: masked gather
   acc |= frontier_plane[vadj]  (where live)   # word-OR, 32 lanes at once
 
+Retirement is PER PLANE (a plane stops gathering once all its needed lanes
+found a parent); ``msbfs_probe_ref`` mirrors that exactly, and the caller
+masks ``acc & need`` so cross-plane retirement differences cannot leak.
+
 VMEM residency mirrors ``bottom_up_probe``: vertex-tile operands stream
-via BlockSpec (auto double-buffered), while ``col_idx`` and the per-vertex
-frontier plane are held whole in VMEM. MAX_POS is statically unrolled.
+via BlockSpec (auto double-buffered) with the plane index as the outer
+grid dimension (each plane's frontier word column stays resident across
+its vertex tiles), while ``col_idx`` is held whole in VMEM. MAX_POS is
+statically unrolled.
 """
 from __future__ import annotations
 
@@ -32,9 +39,9 @@ def _msbfs_probe_kernel(starts_ref, deg_ref, need_ref, col_ref, fp_ref,
                         acc_out, *, max_pos: int, m: int):
     starts = starts_ref[...]
     deg = deg_ref[...]
-    need = need_ref[...]        # uint32 lane words still unserved per vertex
+    need = need_ref[0]          # uint32 lane words still unserved per vertex
     col = col_ref[...]          # local edge slab, VMEM-resident
-    fp = fp_ref[...]            # frontier plane (uint32 word per vertex)
+    fp = fp_ref[0]              # this plane's frontier word per vertex
 
     acc = jnp.zeros_like(need)
     for pos in range(max_pos):  # static unroll — the paper's MAX_POS loop
@@ -44,21 +51,27 @@ def _msbfs_probe_kernel(starts_ref, deg_ref, need_ref, col_ref, fp_ref,
         w = jnp.take(fp, vadj, axis=0)                     # lane-word gather
         acc = acc | jnp.where(live, w, jnp.uint32(0))
 
-    acc_out[...] = acc
+    acc_out[0] = acc
 
 
 @functools.partial(jax.jit, static_argnames=("max_pos", "interpret"))
 def msbfs_probe_pallas(starts: jnp.ndarray, deg: jnp.ndarray,
-                       need_plane: jnp.ndarray, col_idx: jnp.ndarray,
-                       frontier_plane: jnp.ndarray, max_pos: int = 8,
+                       need_words: jnp.ndarray, col_idx: jnp.ndarray,
+                       frontier_words: jnp.ndarray, max_pos: int = 8,
                        interpret: bool = True):
-    """Returns acc uint32[n] — OR of the first ``max_pos`` neighbours'
-    frontier words, per vertex, retired once ``need`` is fully served.
+    """Returns acc — OR of the first ``max_pos`` neighbours' frontier
+    words, per vertex and word plane, retired per plane once ``need`` is
+    fully served.
 
-    Shapes: starts/deg int32[n]; need_plane/frontier_plane uint32[n];
-    col_idx int32[m]. n is padded to a multiple of 1024 internally.
+    Shapes: starts/deg int32[n]; need_words/frontier_words uint32[n, W]
+    (uint32[n] accepted as W=1 and returned flat); col_idx int32[m]. n is
+    padded to a multiple of 1024 internally; W is a static grid dimension.
     """
-    n = starts.shape[0]
+    flat = need_words.ndim == 1
+    if flat:
+        need_words = need_words[:, None]
+        frontier_words = frontier_words[:, None]
+    n, w = need_words.shape
     m = col_idx.shape[0]
     n_pad = cdiv(n, TILE) * TILE
     pad = n_pad - n
@@ -68,22 +81,29 @@ def msbfs_probe_pallas(starts: jnp.ndarray, deg: jnp.ndarray,
 
     starts2 = pad1(starts).reshape(-1, SUBLANES, LANES)
     deg2 = pad1(deg).reshape(-1, SUBLANES, LANES)
-    need2 = pad1(need_plane).reshape(-1, SUBLANES, LANES)
-    fp = pad1(frontier_plane)   # padded so gathers of padded vadj are safe
+    # plane-major [W, ...] so the w grid index selects a contiguous plane
+    need2 = jnp.pad(need_words, ((0, pad), (0, 0))).T.reshape(
+        w, -1, SUBLANES, LANES)
+    fp = jnp.pad(frontier_words, ((0, pad), (0, 0))).T  # [W, n_pad]; padded
+    # rows keep gathers of padded vadj safe
 
-    grid = (n_pad // TILE,)
-    tile_spec = pl.BlockSpec((1, SUBLANES, LANES), lambda i: (i, 0, 0))
-    full_col = pl.BlockSpec(col_idx.shape, lambda i: (0,))
-    full_fp = pl.BlockSpec(fp.shape, lambda i: (0,))
+    tiles = n_pad // TILE
+    grid = (w, tiles)
+    vert_spec = pl.BlockSpec((1, SUBLANES, LANES), lambda pw, i: (i, 0, 0))
+    plane_tile_spec = pl.BlockSpec((1, 1, SUBLANES, LANES),
+                                   lambda pw, i: (pw, i, 0, 0))
+    full_col = pl.BlockSpec(col_idx.shape, lambda pw, i: (0,))
+    plane_fp = pl.BlockSpec((1, n_pad), lambda pw, i: (pw, 0))
 
     acc = pl.pallas_call(
         functools.partial(_msbfs_probe_kernel, max_pos=max_pos, m=m),
         grid=grid,
-        in_specs=[tile_spec, tile_spec, tile_spec, full_col, full_fp],
-        out_specs=tile_spec,
-        out_shape=jax.ShapeDtypeStruct((n_pad // TILE, SUBLANES, LANES),
+        in_specs=[vert_spec, vert_spec, plane_tile_spec, full_col, plane_fp],
+        out_specs=plane_tile_spec,
+        out_shape=jax.ShapeDtypeStruct((w, tiles, SUBLANES, LANES),
                                        jnp.uint32),
         interpret=interpret,
     )(starts2, deg2, need2, col_idx, fp)
 
-    return acc.reshape(n_pad)[:n]
+    acc = acc.reshape(w, n_pad)[:, :n].T
+    return acc[:, 0] if flat else acc

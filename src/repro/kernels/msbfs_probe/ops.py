@@ -3,12 +3,11 @@
 ``msbfs_probe`` is what ``repro.core.msbfs`` calls when
 ``probe_impl='pallas'``; it matches the ``_probe_xla`` contract: given the
 packed frontier / need lane words (uint32[n, W]) it returns the probe OR
-accumulator uint32[n, W] (caller masks with ``need``). Word planes are
-independent, so the (static, W <= 2) planes are separate kernel launches.
+accumulator uint32[n, W] (caller masks with ``need``). The lane-word count
+W is a kernel grid dimension — ONE launch serves every plane, however wide
+the pipelined engine's lane pool is.
 """
 from __future__ import annotations
-
-import jax.numpy as jnp
 
 from repro.kernels.common import interpret_default
 from repro.kernels.msbfs_probe.kernel import msbfs_probe_pallas
@@ -18,11 +17,6 @@ def msbfs_probe(row_ptr, col_idx, frontier_words, need_words,
                 max_pos: int = 8):
     starts = row_ptr[:-1]
     deg = row_ptr[1:] - row_ptr[:-1]
-    interpret = interpret_default()
-    planes = [
-        msbfs_probe_pallas(starts, deg, need_words[:, w], col_idx,
-                           frontier_words[:, w], max_pos=max_pos,
-                           interpret=interpret)
-        for w in range(frontier_words.shape[1])
-    ]
-    return jnp.stack(planes, axis=1)
+    return msbfs_probe_pallas(starts, deg, need_words, col_idx,
+                              frontier_words, max_pos=max_pos,
+                              interpret=interpret_default())

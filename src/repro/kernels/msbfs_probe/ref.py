@@ -4,14 +4,20 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def msbfs_probe_ref(starts, deg, need_plane, col_idx, frontier_plane,
+def msbfs_probe_ref(starts, deg, need_words, col_idx, frontier_words,
                     max_pos: int = 8):
-    """Identical math to the kernel, plain jnp. Returns acc uint32[n]."""
+    """Identical math to the kernel, plain jnp. Accepts uint32[n, W] word
+    planes (or uint32[n] as W=1); retirement is per plane, elementwise —
+    a plane keeps gathering only while ITS need bits are unserved."""
+    flat = need_words.ndim == 1
+    if flat:
+        need_words = need_words[:, None]
+        frontier_words = frontier_words[:, None]
     m = col_idx.shape[0]
-    acc = jnp.zeros_like(need_plane)
+    acc = jnp.zeros_like(need_words)
     for pos in range(max_pos):
-        live = ((need_plane & ~acc) != 0) & (pos < deg)
+        live = ((need_words & ~acc) != 0) & (pos < deg)[:, None]
         idx = jnp.clip(starts + pos, 0, m - 1)
         vadj = col_idx[idx]
-        acc = acc | jnp.where(live, frontier_plane[vadj], jnp.uint32(0))
-    return acc
+        acc = acc | jnp.where(live, frontier_words[vadj], jnp.uint32(0))
+    return acc[:, 0] if flat else acc

@@ -12,6 +12,8 @@ from repro.kernels.bottom_up_probe.ref import bottom_up_probe_ref
 from repro.kernels.ell_spmm.kernel import ell_spmm_pallas
 from repro.kernels.ell_spmm.ops import spmm_aggregate
 from repro.kernels.ell_spmm.ref import ell_spmm_ref
+from repro.kernels.msbfs_probe.kernel import msbfs_probe_pallas
+from repro.kernels.msbfs_probe.ref import msbfs_probe_ref
 from repro.kernels.topdown_scan.kernel import topdown_scan_pallas
 from repro.kernels.topdown_scan.ref import topdown_scan_ref
 
@@ -34,6 +36,41 @@ def test_bottom_up_probe_sweep(scale, ef, seed, max_pos):
                                  g.col_idx, fw, max_pos=max_pos)
     np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
     np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+@pytest.mark.parametrize("lane_words", [1, 2, 4])
+@pytest.mark.parametrize("max_pos", [1, 3, 8])
+def test_msbfs_probe_lane_word_sweep(lane_words, max_pos):
+    """The probe's lane-word count W is a kernel grid parameter: parity
+    with the oracle over randomized W (up to 128 roots) and MAX_POS —
+    beyond the single-word case the per-plane retirement must not leak
+    across planes."""
+    g = rmat_graph(8, 4, seed=lane_words * 10 + max_pos)
+    rng = np.random.default_rng(lane_words * 100 + max_pos)
+    fro = jnp.asarray(rng.integers(0, 2 ** 32, (g.n, lane_words),
+                                   dtype=np.uint32))
+    need = jnp.asarray(rng.integers(0, 2 ** 32, (g.n, lane_words),
+                                    dtype=np.uint32))
+    a1 = msbfs_probe_pallas(g.row_ptr[:-1], g.deg, need, g.col_idx, fro,
+                            max_pos=max_pos, interpret=True)
+    a2 = msbfs_probe_ref(g.row_ptr[:-1], g.deg, need, g.col_idx, fro,
+                         max_pos=max_pos)
+    assert a1.shape == (g.n, lane_words)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_msbfs_probe_flat_plane_compat():
+    """uint32[n] single planes still round-trip (W=1 fast path)."""
+    g = rmat_graph(7, 8, seed=9)
+    rng = np.random.default_rng(9)
+    fro = jnp.asarray(rng.integers(0, 2 ** 32, g.n, dtype=np.uint32))
+    need = jnp.asarray(rng.integers(0, 2 ** 32, g.n, dtype=np.uint32))
+    a1 = msbfs_probe_pallas(g.row_ptr[:-1], g.deg, need, g.col_idx, fro,
+                            max_pos=4, interpret=True)
+    a2 = msbfs_probe_ref(g.row_ptr[:-1], g.deg, need, g.col_idx, fro,
+                         max_pos=4)
+    assert a1.shape == (g.n,)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
 
 
 @pytest.mark.parametrize("n,m,seed", [(300, 1200, 0), (1024, 8000, 1),

@@ -12,7 +12,10 @@ import pytest
 from repro.core import msbfs as ms
 from repro.core.csr import from_edges, to_numpy_adj
 from repro.core.hybrid import bfs
-from repro.core.msbfs import msbfs, pack_lanes, segment_or, unpack_lanes
+from repro.core.msbfs import (msbfs, msbfs_engine_enqueue, msbfs_engine_idle,
+                              msbfs_engine_init, msbfs_engine_result,
+                              msbfs_engine_step, msbfs_pipelined, pack_lanes,
+                              segment_or, unpack_lanes)
 from repro.core.ref import bfs_reference
 from repro.graph.generator import rmat_graph, sample_roots
 from repro.graph.validate import validate_bfs_tree
@@ -154,3 +157,161 @@ def test_msbfs_rejects_bad_batches(g_rmat):
         msbfs(g_rmat, jnp.zeros((65,), jnp.int32))
     with pytest.raises(ValueError, match="mode"):
         msbfs(g_rmat, jnp.zeros((2,), jnp.int32), "sideways")
+    with pytest.raises(ValueError, match="mode"):
+        msbfs_pipelined(g_rmat, jnp.zeros((2,), jnp.int32), "sideways")
+    with pytest.raises(ValueError, match="at least one root"):
+        msbfs_pipelined(g_rmat, jnp.zeros((0,), jnp.int32))
+
+
+# --------------------------- pipelined engine ---------------------------
+
+
+@pytest.mark.parametrize("num_roots,lanes", [(96, 64), (20, 8), (7, 32)])
+def test_pipelined_matches_serial_beyond_lane_pool(g_rmat, num_roots, lanes):
+    """R above / below the lane pool: refilled lanes replay serial runs."""
+    roots = sample_roots(g_rmat, num_roots, seed=11)
+    out = msbfs_pipelined(g_rmat, jnp.asarray(roots), "hybrid", lanes=lanes)
+    assert out.parent.shape == (g_rmat.n, num_roots)
+    _assert_lanes_match_serial(g_rmat, roots, out)
+
+
+def test_pipelined_equals_single_batch_sweep(g_rmat):
+    """Same roots through both engines: bit-for-bit identical results,
+    including per-root traces (lane refill must not perturb a root's
+    switching decisions)."""
+    roots = jnp.asarray(sample_roots(g_rmat, 40, seed=12))
+    a = msbfs(g_rmat, roots, "hybrid")
+    b = msbfs_pipelined(g_rmat, roots, "hybrid", lanes=16)
+    for name in MSBFSResult_fields():
+        np.testing.assert_array_equal(np.asarray(getattr(a, name)),
+                                      np.asarray(getattr(b, name)),
+                                      err_msg=name)
+
+
+def MSBFSResult_fields():
+    return ("parent", "depth", "num_layers", "edges_traversed", "trace_dir",
+            "trace_vf", "trace_ef", "trace_eu")
+
+
+@pytest.mark.parametrize("mode", ["topdown", "bottomup"])
+def test_pipelined_forced_modes(g_rmat, mode):
+    roots = sample_roots(g_rmat, 70, seed=13)
+    out = msbfs_pipelined(g_rmat, jnp.asarray(roots), mode, lanes=64)
+    _assert_lanes_match_serial(g_rmat, roots, out, mode)
+
+
+def test_pipelined_pallas_probe(g_rmat):
+    """R > MAX_LANES through the W-parametric Pallas probe kernel."""
+    roots = sample_roots(g_rmat, 72, seed=14)
+    out = msbfs_pipelined(g_rmat, jnp.asarray(roots), "hybrid",
+                          probe_impl="pallas", lanes=64)
+    _assert_lanes_match_serial(g_rmat, roots, out)
+
+
+def test_pipelined_sweep_is_shorter_than_batch_sum():
+    """The refill pipeline's whole point: mixing deep (ring) and shallow
+    (star) roots, total engine layers must beat the barriered word-batch
+    schedule (each batch waits for its deepest lane)."""
+    n = 96
+    v = np.arange(n)
+    ring_edges = (v, (v + 1) % n)
+    star_src = np.full(n - 2, n, np.int64)
+    g = from_edges(np.concatenate([ring_edges[0], star_src]),
+                   np.concatenate([ring_edges[1],
+                                   np.arange(1, n - 1) + n]),
+                   2 * n)
+    # 2 lanes, 4 roots: lane pool must process [deep, shallow, shallow,
+    # shallow]; pipelining lets the shallow lane chew through queue while
+    # the ring lane is still going
+    roots = jnp.asarray([0, n, n + 1, n + 2], jnp.int32)
+    state = msbfs_engine_init(g, capacity=4, lanes=2)
+    state = msbfs_engine_enqueue(state, roots)
+    layers = 0
+    while not msbfs_engine_idle(state):
+        state = msbfs_engine_step(g, state, "hybrid")
+        layers += 1
+    deep = int(bfs(g, 0, "hybrid").num_layers)
+    sh = [int(bfs(g, int(r), "hybrid").num_layers) for r in roots[1:]]
+    # barriered word-batches of 2: (deep | sh0) then (sh1 | sh2)
+    barriered = max(deep, sh[0]) + max(sh[1], sh[2])
+    assert layers < barriered, (layers, barriered)
+    # refill keeps lane 2 busy back-to-back while lane 1 walks the ring:
+    # total layers = the longer of the two lane schedules, no bubbles
+    assert layers == max(deep, sum(sh)), (layers, deep, sh)
+
+
+def test_streaming_enqueue_mid_sweep(g_rmat):
+    """Roots enqueued WHILE the sweep runs land in idle lanes and finish
+    validator-clean — the serve_bfs serving loop in miniature."""
+    roots = sample_roots(g_rmat, 24, seed=15)
+    state = msbfs_engine_init(g_rmat, capacity=24, lanes=8)
+    state = msbfs_engine_enqueue(state, roots[:8])
+    fed, steps = 8, 0
+    while fed < 24 or not msbfs_engine_idle(state):
+        state = msbfs_engine_step(g_rmat, state, "hybrid")
+        steps += 1
+        if steps % 2 == 0 and fed < 24:
+            state = msbfs_engine_enqueue(state, roots[fed:fed + 4])
+            fed += 4
+    out = msbfs_engine_result(g_rmat, state)
+    _assert_lanes_match_serial(g_rmat, roots, out)
+    assert (np.asarray(state.out_layers[:24]) > 0).all()
+
+
+def test_engines_agree_on_multi_component_traces():
+    """A lane that finishes early (small component) must leave its unused
+    trace rows at init values in BOTH engines — the single-batch sweep
+    keeps looping for deeper lanes, but dead lanes record nothing."""
+    # path 0-..-5, star at 10-15, plus an unreached blob 20-23
+    src = np.concatenate([np.arange(5), np.full(5, 10), np.arange(20, 23)])
+    dst = np.concatenate([np.arange(1, 6), np.arange(11, 16),
+                          np.arange(21, 24)])
+    g = from_edges(src, dst, 24)
+    roots = jnp.asarray([0, 10], jnp.int32)
+    a = msbfs(g, roots, "hybrid")
+    b = msbfs_pipelined(g, roots, "hybrid", lanes=2)
+    for name in MSBFSResult_fields():
+        np.testing.assert_array_equal(np.asarray(getattr(a, name)),
+                                      np.asarray(getattr(b, name)),
+                                      err_msg=name)
+    # star lane (num_layers 2-3) leaves later rows untouched
+    nl = int(a.num_layers[1])
+    assert (np.asarray(a.trace_eu)[nl:, 1] == 0).all()
+    assert (np.asarray(a.trace_dir)[nl:, 1] == -1).all()
+
+
+def test_engines_agree_at_max_trace_cap():
+    """Component diameter >= MAX_TRACE: both engines cap num_layers at
+    MAX_TRACE (the serial loop bound) with identical truncated depths."""
+    n = ms.MAX_TRACE + 10
+    v = np.arange(n - 1)
+    g = from_edges(v, v + 1, n)          # path graph, diameter n-1 > cap
+    roots = jnp.asarray([0], jnp.int32)
+    a = msbfs(g, roots, "topdown")
+    b = msbfs_pipelined(g, roots, "topdown", lanes=1)
+    s = bfs(g, 0, "topdown")
+    assert int(a.num_layers[0]) == int(b.num_layers[0]) \
+        == int(s.num_layers) == ms.MAX_TRACE
+    np.testing.assert_array_equal(np.asarray(a.depth[:, 0]),
+                                  np.asarray(s.depth))
+    np.testing.assert_array_equal(np.asarray(b.depth[:, 0]),
+                                  np.asarray(s.depth))
+
+
+def test_engine_result_on_fresh_engine_is_empty(g_rmat):
+    state = msbfs_engine_init(g_rmat, capacity=4, lanes=2)
+    out = msbfs_engine_result(g_rmat, state)
+    assert out.parent.shape == (g_rmat.n, 0)
+    assert out.depth.shape == (g_rmat.n, 0)
+    assert out.num_layers.shape == (0,)
+
+
+def test_engine_queue_overflow_and_init_guards(g_rmat):
+    state = msbfs_engine_init(g_rmat, capacity=4, lanes=2)
+    state = msbfs_engine_enqueue(state, jnp.zeros((4,), jnp.int32))
+    with pytest.raises(ValueError, match="overflow"):
+        msbfs_engine_enqueue(state, jnp.zeros((1,), jnp.int32))
+    with pytest.raises(ValueError, match="capacity"):
+        msbfs_engine_init(g_rmat, capacity=0)
+    with pytest.raises(ValueError, match="lanes"):
+        msbfs_engine_init(g_rmat, capacity=4, lanes=0)
