@@ -3,13 +3,18 @@
 #   make test             tier-1 suite (the ROADMAP verify command)
 #   make test-properties  hypothesis MS-BFS property suite, fixed seed /
 #                         bounded examples (derandomized -> reproducible)
+#   make test-dist        distributed suites under 4 forced host devices
 #   make bench-smoke      MS-BFS TEPS curve (R=64/128/256) at a small scale
 #   make bench            the same at the paper-protocol scale 14
+#   make bench-dist       sharded MS-BFS scaling curve (ndev 1/2/4)
+#   make ci-bench         fast benches -> BENCH_pr.json + regression gate
+#   make lint             ruff check + format check (rule set: ruff.toml)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-properties bench-smoke bench
+.PHONY: test test-properties test-dist bench-smoke bench bench-dist \
+        ci-bench lint
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -18,8 +23,23 @@ test-properties:
 	MSBFS_PROP_EXAMPLES=25 $(PYTHON) -m pytest \
 	    tests/test_msbfs_properties.py tests/test_validate.py -q
 
+test-dist:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 $(PYTHON) -m pytest \
+	    tests/test_dist_bfs.py tests/test_dist_msbfs.py -q
+
 bench-smoke:
 	$(PYTHON) benchmarks/msbfs_teps.py --scale 10
 
 bench:
 	$(PYTHON) benchmarks/msbfs_teps.py --scale 14
+
+bench-dist:
+	$(PYTHON) benchmarks/dist_msbfs_teps.py --scale 12
+
+ci-bench:
+	$(PYTHON) benchmarks/ci_bench.py --out BENCH_pr.json \
+	    --baseline BENCH_baseline.json --tolerance 0.25
+
+lint:
+	ruff check .
+	ruff format --check .

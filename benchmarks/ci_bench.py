@@ -1,0 +1,149 @@
+"""CI benchmark gate: run the fast benches, emit BENCH_pr.json, compare.
+
+Collects one higher-is-better throughput number per benchmark:
+
+* every ``benchmarks/run.py`` fast-default bench as calls/sec
+  (1e6 / us_per_call — the paper-table analogs have no TEPS axis);
+* MS-BFS aggregate TEPS, serial loop and pipelined batched engine
+  (scale 10, R=64);
+* the distributed MS-BFS smoke (``dist_msbfs_teps.py --smoke``), run in a
+  subprocess so the forced host-device count never leaks into the
+  single-device timings.
+
+Gate: with ``--baseline BENCH_baseline.json``, exit 1 when any benchmark
+regresses more than ``--tolerance`` (default 25%) below its baseline
+value. New benchmarks absent from the baseline pass (and are reported);
+refresh the checked-in baseline with ``--write-baseline`` on a quiet
+machine when a PR legitimately shifts throughput.
+
+  PYTHONPATH=src python benchmarks/ci_bench.py --out BENCH_pr.json \
+      --baseline BENCH_baseline.json --tolerance 0.25
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+# allow `python benchmarks/ci_bench.py` (sys.path[0] = benchmarks/)
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO not in sys.path:
+    sys.path.insert(0, _REPO)
+
+
+def _bench_run_py() -> dict:
+    from benchmarks.run import BENCHES
+    out = {}
+    for name, fn in BENCHES:
+        try:
+            us, derived = fn(False)
+        except Exception as e:       # e.g. roofline needs dryrun artifacts
+            print(f"skip run.{name}: {type(e).__name__}: {e}")
+            continue
+        out[f"run.{name}"] = dict(value=1e6 / max(us, 1e-9),
+                                  unit="calls_per_sec", derived=derived)
+    return out
+
+
+def _bench_msbfs(scale: int = 10, roots: int = 64) -> dict:
+    from repro.graph.generator import rmat_graph
+    from repro.graph.graph500 import run_graph500
+    g = rmat_graph(scale, 16, 0)
+    out = {}
+    for label, batched in (("serial", False), ("batched", True)):
+        res = run_graph500(scale, 16, mode="hybrid", num_roots=roots,
+                           seed=0, graph=g, batched=batched)
+        out[f"msbfs.{label}_s{scale}_R{roots}"] = dict(
+            value=res.aggregate_teps, unit="teps")
+    return out
+
+
+def _bench_dist_smoke() -> dict:
+    here = os.path.dirname(os.path.abspath(__file__))
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        tmp = f.name
+    try:
+        subprocess.run(
+            [sys.executable, os.path.join(here, "dist_msbfs_teps.py"),
+             "--smoke", "--json", tmp],
+            check=True, env=dict(os.environ), timeout=1800)
+        with open(tmp) as f:
+            points = json.load(f)
+    finally:
+        os.unlink(tmp)
+    return {f"dist_msbfs.{k}": dict(value=v, unit="teps")
+            for k, v in points.items()}
+
+
+def compare(pr: dict, baseline: dict, tolerance: float) -> list[str]:
+    """Regressions worse than ``tolerance`` (fractional drop), as
+    human-readable failure lines."""
+    failures = []
+    for name, base in baseline["benchmarks"].items():
+        cur = pr["benchmarks"].get(name)
+        if cur is None:
+            failures.append(f"{name}: present in baseline but not in PR run")
+            continue
+        floor = base["value"] * (1.0 - tolerance)
+        if cur["value"] < floor:
+            drop = 1.0 - cur["value"] / max(base["value"], 1e-12)
+            failures.append(
+                f"{name}: {cur['value']:.3g} {cur['unit']} is "
+                f"{drop:.0%} below baseline {base['value']:.3g} "
+                f"(tolerance {tolerance:.0%})")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_pr.json")
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="also write the result to the --baseline path")
+    ap.add_argument("--skip-dist", action="store_true",
+                    help="skip the subprocess dist smoke (debug aid)")
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    benches: dict = {}
+    benches.update(_bench_run_py())
+    benches.update(_bench_msbfs())
+    if not args.skip_dist:
+        benches.update(_bench_dist_smoke())
+    pr = dict(tolerance=args.tolerance,
+              wall_s=round(time.perf_counter() - t0, 2),
+              benchmarks=benches)
+
+    with open(args.out, "w") as f:
+        json.dump(pr, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out} ({len(benches)} benchmarks, "
+          f"{pr['wall_s']}s)")
+    for name in sorted(benches):
+        b = benches[name]
+        print(f"  {name:40s} {b['value']:12.4g} {b['unit']}")
+
+    if args.write_baseline and args.baseline:
+        with open(args.baseline, "w") as f:
+            json.dump(pr, f, indent=2, sort_keys=True)
+        print(f"wrote baseline {args.baseline}")
+        return
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        failures = compare(pr, baseline, args.tolerance)
+        if failures:
+            print("TEPS regression gate FAILED:")
+            for line in failures:
+                print(f"  {line}")
+            sys.exit(1)
+        print(f"regression gate passed vs {args.baseline} "
+              f"(tolerance {args.tolerance:.0%})")
+
+
+if __name__ == "__main__":
+    main()

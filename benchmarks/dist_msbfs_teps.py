@@ -1,0 +1,104 @@
+"""Distributed MS-BFS TEPS scaling curve: the sharded bit-lane engine.
+
+Runs the pipelined packed engine over a 1-D partitioned graph
+(``repro.core.dist_msbfs``) on a forced-host-device CPU mesh for
+ndev ∈ {1, 2, 4} and R ∈ {64, 256}, against the single-host pipelined
+engine as baseline. On one CPU the "devices" share the same cores, so the
+curve measures the COST STRUCTURE of the distributed formulation (psum
+counter merges + the per-layer allreduce-OR frontier exchange), not real
+scaling — the acceptance axis is that every sharded point stays
+validator-clean and bit-identical to serial BFS while the overhead stays
+bounded; on a real mesh the same code path is the Graph500 root-batch
+server.
+
+  PYTHONPATH=src python benchmarks/dist_msbfs_teps.py --scale 12
+  PYTHONPATH=src python benchmarks/dist_msbfs_teps.py --smoke --json out.json
+
+XLA_FLAGS is set to force the needed host device count BEFORE jax loads;
+an inherited XLA_FLAGS with the flag already present wins.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def _force_devices(ndev: int) -> None:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={ndev}".strip())
+
+
+def run_curve(scale: int, edgefactor: int, ndevs, roots_curve, mode: str,
+              seed: int, lanes: int | None, validate: bool) -> dict:
+    """aggregate-TEPS per (ndev, R) point; ndev=0 keys the single-host
+    pipelined baseline. Returns {label: teps}."""
+    import numpy as np
+
+    from repro.graph.generator import rmat_graph
+    from repro.graph.graph500 import run_graph500
+
+    g = rmat_graph(scale, edgefactor, seed)
+    m_undirected = g.m // 2
+    print(f"# dist MS-BFS TEPS — scale={scale} ef={edgefactor} mode={mode} "
+          f"ndev={list(ndevs)} R={list(roots_curve)} "
+          f"lanes={'auto' if not lanes else lanes}")
+    print(f"  n={g.n:,} vertices, m={g.m:,} directed edges "
+          f"({m_undirected:,} undirected)")
+
+    points: dict[str, float] = {}
+    for r in roots_curve:
+        base = run_graph500(scale, edgefactor, mode=mode, num_roots=r,
+                            seed=seed, graph=g, batched=True, lanes=lanes,
+                            validate=validate)
+        base_teps = base.aggregate_teps
+        points[f"host_R{r}"] = base_teps
+        print(f"  single-host R={r:4d}: "
+              f"{base_teps / 1e6:8.2f} MTEPS (lanes={base.lanes})")
+        for ndev in ndevs:
+            res = run_graph500(scale, edgefactor, mode=mode, num_roots=r,
+                               seed=seed, graph=g, batched=True,
+                               lanes=lanes, ndev=ndev, validate=validate)
+            teps = res.aggregate_teps
+            points[f"ndev{ndev}_R{r}"] = teps
+            rel = teps / max(base_teps, 1e-12)
+            print(f"  sharded ndev={ndev} R={r:4d}: {teps / 1e6:8.2f} MTEPS "
+                  f"({rel:5.2f}x single-host, lanes={res.lanes})")
+        assert np.isfinite(points[f"host_R{r}"])
+    return points
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--edgefactor", type=int, default=16)
+    ap.add_argument("--ndev", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--roots", type=int, nargs="+", default=[64, 256])
+    ap.add_argument("--mode", default="hybrid",
+                    choices=("hybrid", "topdown", "bottomup_simd"))
+    ap.add_argument("--lanes", type=int, default=0,
+                    help="bit-lane pool; 0 = adaptive sizing")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--validate", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: scale 10, ndev {1,2}, R=64")
+    ap.add_argument("--json", default=None,
+                    help="write {label: teps} to this path")
+    args = ap.parse_args()
+    if args.smoke:
+        args.scale, args.ndev, args.roots = 10, [1, 2], [64]
+    _force_devices(max(args.ndev))
+
+    points = run_curve(args.scale, args.edgefactor, args.ndev, args.roots,
+                       args.mode, args.seed, args.lanes or None,
+                       args.validate)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(points, f, indent=2, sort_keys=True)
+        print(f"  wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

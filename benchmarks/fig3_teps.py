@@ -8,7 +8,6 @@ edgefactor, hybrid > top-down.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.graph.generator import rmat_graph
 from repro.graph.graph500 import run_graph500

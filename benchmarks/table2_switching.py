@@ -5,7 +5,6 @@ Graph500 BFS, showing the TD -> BU -> TD switching points.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.hybrid import ALPHA_DEFAULT, BETA_DEFAULT, bfs
 from repro.graph.generator import rmat_graph, sample_roots

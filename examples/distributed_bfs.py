@@ -22,11 +22,12 @@ mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 dg = partition_graph(g, 8)
 root = int(sample_roots(g, 1, seed=1)[0])
 
-par_dist, layers = dist_bfs(dg, root, mesh, "hybrid")
-par_single = bfs(g, root, "hybrid").parent
+res = dist_bfs(dg, root, mesh, "hybrid")
+single = bfs(g, root, "hybrid")
 
-match = bool((np.asarray(par_dist) == np.asarray(par_single)).all())
+match = bool((np.asarray(res.parent) == np.asarray(single.parent)).all()
+             and (np.asarray(res.depth) == np.asarray(single.depth)).all())
 print(f"n={g.n:,} m={g.m:,} root={root}")
 print(f"distributed BFS over {mesh.devices.size} devices: "
-      f"{int(layers)} layers; matches single-device: {match}")
+      f"{int(res.num_layers)} layers; matches single-device: {match}")
 assert match

@@ -10,8 +10,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import make_step
-from repro.configs.reduced import reduce_arch
 from repro.graph.generator import rmat_graph
 from repro.graph.sampler import dedup_count, sampled_graph_batch
 from repro.models.gnn.gin import GINConfig, gin_loss, init_gin

@@ -8,8 +8,7 @@ lowers ``make_step(arch, shape)`` against them.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax

@@ -7,7 +7,6 @@ import dataclasses
 
 from repro.configs.base import Arch, Shape, get_arch
 from repro.models.moe import MoEConfig
-from repro.optim.adamw import OptConfig
 
 
 def _lm_reduced(arch: Arch) -> Arch:

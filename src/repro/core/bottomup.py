@@ -17,7 +17,6 @@ the top-down scatter-min rule (DESIGN §3.3).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

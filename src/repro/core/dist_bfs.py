@@ -23,6 +23,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +35,16 @@ from repro.core import bitmap, compat
 from repro.core.csr import CSRGraph
 
 MAX_LAYERS = 64
+
+
+class DistBFSResult(NamedTuple):
+    """Single-root distributed BFS result, sentinel conventions aligned
+    with ``MSBFSResult``: dead/unreached vertices hold -1 in BOTH parent
+    and depth, ``parent[root] == root`` and ``depth[root] == 0``. Arrays
+    are trimmed to the original (pre-padding) vertex count."""
+    parent: jnp.ndarray        # int32[n_orig], -1 unreached
+    depth: jnp.ndarray         # int32[n_orig], -1 unreached
+    num_layers: jnp.ndarray    # int32 scalar
 
 
 @dataclass(frozen=True)
@@ -112,13 +123,14 @@ def _dist_bfs_impl(row_ptr_s, col_s, srcloc_s, deg_s, root, *, mesh: Mesh,
         frontier = local_ids == root
         visited = frontier
         parent = jnp.where(frontier, root, -1).astype(jnp.int32)
+        depth = jnp.where(frontier, 0, -1).astype(jnp.int32)
         starts = row_ptr[:-1]
 
         def cond_fn(state):
-            return state[5] & (state[4] < MAX_LAYERS)
+            return state[6] & (state[5] < MAX_LAYERS)
 
         def layer_fn(state):
-            frontier, visited, parent, topdown, layer, _ = state
+            frontier, visited, parent, depth, topdown, layer, _ = state
             deg32 = deg.astype(jnp.int32)
             e_f = jax.lax.psum(jnp.sum(jnp.where(frontier, deg32, 0)), axes)
             v_f = jax.lax.psum(jnp.sum(frontier, dtype=jnp.int32), axes)
@@ -188,35 +200,40 @@ def _dist_bfs_impl(row_ptr_s, col_s, srcloc_s, deg_s, root, *, mesh: Mesh,
 
             frontier, visited, parent = jax.lax.cond(
                 td, run_td, run_bu, (frontier, visited, parent))
+            depth = jnp.where(frontier, layer + 1, depth)
             nonempty = jax.lax.psum(jnp.sum(frontier, dtype=jnp.int32),
                                     axes) > 0
-            return frontier, visited, parent, td, layer + 1, nonempty
+            return frontier, visited, parent, depth, td, layer + 1, nonempty
 
-        state = (frontier, visited, parent, jnp.bool_(mode != "bottomup"),
-                 jnp.int32(0), jnp.bool_(True))
+        state = (frontier, visited, parent, depth,
+                 jnp.bool_(mode != "bottomup"), jnp.int32(0),
+                 jnp.bool_(True))
         state = jax.lax.while_loop(cond_fn, layer_fn, state)
-        parent, layers = state[2], state[4]
+        parent, depth, layers = state[2], state[3], state[5]
         parent_full = jax.lax.all_gather(parent, axes, tiled=True)
-        return parent_full, layers
+        depth_full = jax.lax.all_gather(depth, axes, tiled=True)
+        return parent_full, depth_full, layers
 
     spec_dev = P(axes)   # leading dim sharded over all mesh axes jointly
     # out_specs=P(): outputs are replicated (all_gather / psum products);
     # the static VMA check can't see through the while_loop, so disable it.
-    parent_full, layers = compat.shard_map(
+    parent_full, depth_full, layers = compat.shard_map(
         body, mesh=mesh,
         in_specs=(spec_dev, spec_dev, spec_dev, spec_dev, P()),
-        out_specs=(P(), P()), check_vma=False,
+        out_specs=(P(), P(), P()), check_vma=False,
     )(row_ptr_s, col_s, srcloc_s, deg_s, root)
-    return parent_full[:n_orig], layers
+    return parent_full[:n_orig], depth_full[:n_orig], layers
 
 
 def dist_bfs(dg: DistGraph, root, mesh: Mesh, mode: str = "hybrid",
              alpha: float = 14.0, beta: float = 24.0, max_pos: int = 8,
-             probe_impl: str = "xla"):
-    """Run distributed BFS; returns (parent int32[n_orig], num_layers)."""
+             probe_impl: str = "xla") -> DistBFSResult:
+    """Run distributed BFS; returns ``DistBFSResult(parent, depth,
+    num_layers)`` with the serial/MS engines' -1 dead-vertex sentinel."""
     ndev = int(np.prod(mesh.devices.shape))
-    return _dist_bfs_impl(
+    parent, depth, layers = _dist_bfs_impl(
         dg.row_ptr, dg.col_idx, dg.src_loc, dg.deg, jnp.int32(root),
         mesh=mesh, mode=mode, alpha=alpha, beta=beta, max_pos=max_pos,
         n=dg.n, n_loc=dg.n // ndev, m_loc=dg.m_loc, n_orig=dg.n_orig,
         probe_impl=probe_impl)
+    return DistBFSResult(parent=parent, depth=depth, num_layers=layers)

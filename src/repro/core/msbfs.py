@@ -47,6 +47,11 @@ arrays (min-id neighbour one level up), so they are *valid* Graph500
 parents; serial ``bfs`` picks the min frontier-neighbour per layer, which
 coincides for the min-parent rule — tests assert exact parent equality on
 top of validator-level equivalence.
+
+The packed step formulations themselves (lane packing, the segmented-OR
+scan, the word-packed probe, per-lane direction dispatch) live in
+``repro.core.packed`` — ONE implementation shared with the sharded engine
+``repro.core.dist_msbfs`` (re-exported here for compatibility).
 """
 from __future__ import annotations
 
@@ -57,13 +62,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.csr import CSRGraph
-from repro.core.hybrid import (ALPHA_DEFAULT, BETA_DEFAULT, MAX_TRACE,
-                               switch_direction)
+from repro.core.hybrid import ALPHA_DEFAULT, BETA_DEFAULT, MAX_TRACE
+from repro.core.packed import (LANE_WORD_BITS, MODES, adaptive_lane_pool,
+                               dispatch_packed_step, lane_counters,
+                               num_lane_words, pack_lanes,
+                               queue_claims, segment_or,
+                               select_direction, unpack_lanes)
+
+__all__ = [
+    "LANE_WORD_BITS", "MAX_LANES", "MODES", "MSBFSResult",
+    "adaptive_lane_pool", "msbfs", "msbfs_engine_drain",
+    "msbfs_engine_enqueue", "msbfs_engine_idle", "msbfs_engine_init",
+    "msbfs_engine_result", "msbfs_engine_step", "msbfs_pipelined",
+    "num_lane_words", "pack_lanes", "segment_or", "unpack_lanes",
+]
 
 MAX_LANES = 64          # two uint32 words of roots per batch
-LANE_WORD_BITS = 32
-
-MODES = ("hybrid", "topdown", "bottomup")
 
 
 class MSBFSResult(NamedTuple):
@@ -87,158 +101,6 @@ class _State(NamedTuple):
     trace_vf: jnp.ndarray
     trace_ef: jnp.ndarray
     trace_eu: jnp.ndarray
-
-
-def num_lane_words(num_roots: int) -> int:
-    return (num_roots + LANE_WORD_BITS - 1) // LANE_WORD_BITS
-
-
-def pack_lanes(mask: jnp.ndarray) -> jnp.ndarray:
-    """Pack bool[..., R] lane masks into uint32[..., W] words (LSB-first)."""
-    r = mask.shape[-1]
-    w = num_lane_words(r)
-    pad = w * LANE_WORD_BITS - r
-    if pad:
-        mask = jnp.concatenate(
-            [mask, jnp.zeros(mask.shape[:-1] + (pad,), mask.dtype)], axis=-1)
-    lanes = mask.reshape(mask.shape[:-1] + (w, LANE_WORD_BITS))
-    weights = jnp.uint32(1) << jnp.arange(LANE_WORD_BITS, dtype=jnp.uint32)
-    return (lanes.astype(jnp.uint32) * weights).sum(axis=-1, dtype=jnp.uint32)
-
-
-def unpack_lanes(words: jnp.ndarray, num_roots: int) -> jnp.ndarray:
-    """Unpack uint32[..., W] lane words into bool[..., R]."""
-    shifts = jnp.arange(LANE_WORD_BITS, dtype=jnp.uint32)
-    bits = (words[..., None] >> shifts) & jnp.uint32(1)
-    flat = bits.reshape(words.shape[:-1] + (-1,))
-    return flat[..., :num_roots].astype(jnp.bool_)
-
-
-def segment_or(vals: jnp.ndarray, row_ptr: jnp.ndarray) -> jnp.ndarray:
-    """Per-CSR-row bitwise OR of uint32[m, W] edge-lane words -> uint32[n, W].
-
-    CSR rows are contiguous runs of edge slots, so the row-OR is a textbook
-    segmented scan: an inclusive ``lax.associative_scan`` over
-    (word, segment-start-flag) pairs, read out at each row's last slot.
-    Empty rows produce 0.
-    """
-    m = vals.shape[0]
-    # row starts equal to m (trailing empty rows) must not flag slot m-1
-    flags = jnp.zeros((m,), jnp.bool_).at[row_ptr[:-1]].set(True, mode="drop")
-
-    def comb(a, b):
-        va, fa = a
-        vb, fb = b
-        return jnp.where(fb[..., None], vb, va | vb), fa | fb
-
-    scanned, _ = jax.lax.associative_scan(comb, (vals, flags))
-    deg = row_ptr[1:] - row_ptr[:-1]
-    last = jnp.clip(row_ptr[1:] - 1, 0, m - 1)
-    return jnp.where((deg > 0)[:, None], scanned[last], jnp.uint32(0))
-
-
-def _probe_xla(g: CSRGraph, frontier: jnp.ndarray, need: jnp.ndarray,
-               max_pos: int) -> jnp.ndarray:
-    """Word-packed MAX_POS probe, XLA formulation (static unroll).
-
-    For each vertex, OR the lane words of its first ``max_pos`` neighbours,
-    retiring the gather once every needed lane has found a parent. The
-    result must be masked with ``need`` by the caller.
-    """
-    m = g.m
-    starts = g.row_ptr[:-1]
-    deg = g.deg
-    acc = jnp.zeros_like(need)
-    for pos in range(max_pos):
-        live = ((need & ~acc) != 0).any(axis=-1) & (pos < deg)
-        vadj = g.col_idx[jnp.clip(starts + pos, 0, m - 1)]
-        acc = acc | jnp.where(live[:, None], frontier[vadj], jnp.uint32(0))
-    return acc
-
-
-def _bottomup_packed_step(g: CSRGraph, frontier: jnp.ndarray,
-                          visited: jnp.ndarray, bu_sel: jnp.ndarray,
-                          max_pos: int, probe_impl: str) -> jnp.ndarray:
-    """Packed bottom-up: probe + lax.cond-skipped segmented-scan fallback.
-    Returns new frontier bits for bottom-up lanes (already & ~visited)."""
-    need = (~visited) & bu_sel
-    if probe_impl == "pallas":
-        from repro.kernels.msbfs_probe import ops as probe_ops
-        acc = probe_ops.msbfs_probe(g.row_ptr, g.col_idx, frontier, need,
-                                    max_pos=max_pos)
-    else:
-        acc = _probe_xla(g, frontier, need, max_pos)
-    found = acc & need
-
-    residue = ((need & ~found) != 0).any(axis=-1) & (g.deg > max_pos)
-
-    def run_fallback(found):
-        pos_e = jnp.arange(g.m, dtype=jnp.int32) - g.row_ptr[g.src_idx]
-        act = residue[g.src_idx] & (pos_e >= max_pos)
-        contrib = jnp.where(act[:, None], frontier[g.col_idx], jnp.uint32(0))
-        return found | (segment_or(contrib, g.row_ptr) & need)
-
-    return jax.lax.cond(jnp.any(residue), run_fallback, lambda f: f, found)
-
-
-def _topdown_packed_step(g: CSRGraph, frontier: jnp.ndarray,
-                         visited: jnp.ndarray,
-                         td_sel: jnp.ndarray) -> jnp.ndarray:
-    """Packed top-down: every edge lane forwards its col-side frontier words
-    (masked to top-down lanes); per-row segmented OR gathers them. On the
-    symmetrised Graph500 graphs this is exactly the TD expansion — the row
-    owner collects from neighbours whose frontier bit is set."""
-    contrib = frontier[g.col_idx] & td_sel
-    return segment_or(contrib, g.row_ptr) & ~visited
-
-
-def _lane_counters(g: CSRGraph, frontier_b: jnp.ndarray,
-                   visited_b: jnp.ndarray):
-    """Per-lane (e_f, v_f, e_u) from unpacked bool[n, R] state."""
-    deg = g.deg.astype(jnp.int32)[:, None]
-    e_f = jnp.sum(jnp.where(frontier_b, deg, 0), axis=0)
-    v_f = jnp.sum(frontier_b, axis=0, dtype=jnp.int32)
-    e_u = jnp.sum(jnp.where(visited_b, 0, deg), axis=0)
-    return e_f, v_f, e_u
-
-
-def _select_direction(mode: str, topdown_prev: jnp.ndarray, e_f, v_f, e_u,
-                      n: int, alpha: float, beta: float,
-                      lanes: int) -> jnp.ndarray:
-    """Per-lane TD/BU decision for one layer — shared by both engines."""
-    if mode == "topdown":
-        return jnp.ones((lanes,), jnp.bool_)
-    if mode == "bottomup":
-        return jnp.zeros((lanes,), jnp.bool_)
-    return switch_direction(topdown_prev, e_f, v_f, e_u, n, alpha, beta)
-
-
-def _dispatch_packed_step(g: CSRGraph, frontier: jnp.ndarray,
-                          visited: jnp.ndarray, td_sel: jnp.ndarray,
-                          bu_sel: jnp.ndarray, mode: str, max_pos: int,
-                          probe_impl: str) -> jnp.ndarray:
-    """Run the packed TD/BU step(s) for one layer under the lane selectors
-    — shared by the single-batch sweep and the pipelined engine (the two
-    must advance frontiers bit-for-bit identically)."""
-    if mode == "topdown":
-        return _topdown_packed_step(g, frontier, visited, td_sel)
-    if mode == "bottomup":
-        return _bottomup_packed_step(g, frontier, visited, bu_sel,
-                                     max_pos, probe_impl)
-    # middle layers usually have EVERY lane on one side — cond-skip the
-    # other direction's O(m)/O(n*max_pos) work (the packed analog of the
-    # serial controller's lax.cond)
-    zero = jnp.zeros_like(frontier)
-    new_td = jax.lax.cond(
-        jnp.any(td_sel != 0),
-        lambda: _topdown_packed_step(g, frontier, visited, td_sel),
-        lambda: zero)
-    new_bu = jax.lax.cond(
-        jnp.any(bu_sel != 0),
-        lambda: _bottomup_packed_step(g, frontier, visited, bu_sel,
-                                      max_pos, probe_impl),
-        lambda: zero)
-    return new_td | new_bu
 
 
 def _derive_parents(g: CSRGraph, depth: jnp.ndarray, roots: jnp.ndarray,
@@ -287,7 +149,6 @@ def msbfs(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",
                          f"got {num_roots} — use msbfs_pipelined for "
                          f"arbitrary root counts")
     w = num_lane_words(num_roots)
-    lane_ids = jnp.arange(num_roots, dtype=jnp.int32)
     root_onehot = roots[None, :] == jnp.arange(n, dtype=jnp.int32)[:, None]
     frontier0 = pack_lanes(root_onehot)                      # uint32[n, W]
     lane_mask = pack_lanes(jnp.ones((num_roots,), jnp.bool_))  # uint32[W]
@@ -298,9 +159,9 @@ def msbfs(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",
     def body_fn(s: _State):
         frontier_b = unpack_lanes(s.frontier, num_roots)
         visited_b = unpack_lanes(s.visited, num_roots)
-        e_f, v_f, e_u = _lane_counters(g, frontier_b, visited_b)
-        topdown = _select_direction(mode, s.topdown, e_f, v_f, e_u, n,
-                                    alpha, beta, num_roots)
+        e_f, v_f, e_u = lane_counters(g, frontier_b, visited_b)
+        topdown = select_direction(mode, s.topdown, e_f, v_f, e_u, n,
+                                   alpha, beta, num_roots)
 
         # dead lanes (empty frontier) leave BOTH selectors: the switch rule
         # flips them to TD (v_f = 0 < n/beta), which would otherwise keep
@@ -308,8 +169,8 @@ def msbfs(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",
         live = v_f > 0
         td_sel = pack_lanes(topdown & live) & lane_mask      # uint32[W]
         bu_sel = pack_lanes(~topdown & live) & lane_mask
-        new = _dispatch_packed_step(g, s.frontier, s.visited, td_sel,
-                                    bu_sel, mode, max_pos, probe_impl)
+        new = dispatch_packed_step(g, s.frontier, s.visited, td_sel,
+                                   bu_sel, mode, max_pos, probe_impl)
 
         depth2 = jnp.where(unpack_lanes(new, num_roots), s.layer + 1, s.depth)
         i = s.layer
@@ -468,11 +329,8 @@ def _refill(g: CSRGraph, s: PipelineState, topdown_init: bool) -> PipelineState:
     cap = s.capacity
 
     def do_refill(s: PipelineState) -> PipelineState:
-        idle = s.lane_qidx >= cap
-        rank = jnp.cumsum(idle.astype(jnp.int32)) - 1
-        cand = s.next_root + rank
-        claim = idle & (cand < s.queued)
-        root = s.queue[jnp.clip(cand, 0, cap - 1)]
+        claim, cand, root = queue_claims(s.lane_qidx, s.next_root,
+                                         s.queued, s.queue)
         onehot = claim[None, :] & (root[None, :]
                                    == jnp.arange(n, dtype=jnp.int32)[:, None])
         fresh = pack_lanes(onehot)                            # uint32[n, W]
@@ -504,9 +362,9 @@ def _pipeline_body(g: CSRGraph, s: PipelineState, mode: str, alpha: float,
     active = s.lane_qidx < cap
     frontier_b = unpack_lanes(s.frontier, lanes)
     visited_b = unpack_lanes(s.visited, lanes)
-    e_f, v_f, e_u = _lane_counters(g, frontier_b, visited_b)
-    topdown = _select_direction(mode, s.topdown, e_f, v_f, e_u, n,
-                                alpha, beta, lanes)
+    e_f, v_f, e_u = lane_counters(g, frontier_b, visited_b)
+    topdown = select_direction(mode, s.topdown, e_f, v_f, e_u, n,
+                               alpha, beta, lanes)
 
     live = active & (v_f > 0)
     td_sel = pack_lanes(topdown & live)                       # uint32[W]
@@ -523,8 +381,8 @@ def _pipeline_body(g: CSRGraph, s: PipelineState, mode: str, alpha: float,
     trace_ef = s.trace_ef.at[tr_row, tr_col].set(e_f)
     trace_eu = s.trace_eu.at[tr_row, tr_col].set(e_u)
 
-    new = _dispatch_packed_step(g, s.frontier, s.visited, td_sel, bu_sel,
-                                mode, max_pos, probe_impl)
+    new = dispatch_packed_step(g, s.frontier, s.visited, td_sel, bu_sel,
+                               mode, max_pos, probe_impl)
 
     new_b = unpack_lanes(new, lanes)
     visited2 = s.visited | new

@@ -1,0 +1,261 @@
+"""Shared packed bit-lane primitives for multi-source BFS.
+
+ONE implementation of the lane-word machinery serves both MS-BFS engines:
+
+* the single-host engines in ``repro.core.msbfs`` (single-batch sweep and
+  the pipelined root-queue engine), and
+* the sharded engine in ``repro.core.dist_msbfs`` (lane words traversing a
+  1-D partitioned graph, Buluc & Madduri frontier exchange applied to the
+  packed representation).
+
+The key property that makes sharing possible: every step function takes
+the graph as a ``CSRGraph`` *view* and only assumes
+
+  - ``row_ptr``/``src_idx`` index LOCAL rows (the rows this caller owns),
+  - ``col_idx`` holds GLOBAL neighbour ids (indices into ``frontier``),
+  - ``frontier`` covers the full global vertex range,
+  - ``visited``/``need`` cover the local rows only.
+
+On a single host "local" and "global" coincide and these are exactly the
+PR-1/PR-2 formulations; under ``shard_map`` each device passes its CSR
+block and the replicated full-width frontier, and the SAME code computes
+that device's slice of the next frontier. Rows padded with the sentinel
+column id ``frontier.shape[0]`` (the distributed edge-slab pad) are
+neutralised by the ``pos < deg`` probe guard, the ``pos_e < deg`` fallback
+guard, and the segmented scan's read-out points all sitting before the pad
+region.
+
+``segment_or`` is the segmented-OR associative scan named by ROADMAP as
+the piece to share with the distributed partition.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import CSRGraph
+from repro.core.hybrid import switch_direction
+
+LANE_WORD_BITS = 32
+
+MODES = ("hybrid", "topdown", "bottomup")
+
+
+def num_lane_words(num_roots: int) -> int:
+    return (num_roots + LANE_WORD_BITS - 1) // LANE_WORD_BITS
+
+
+def pack_lanes(mask: jnp.ndarray) -> jnp.ndarray:
+    """Pack bool[..., R] lane masks into uint32[..., W] words (LSB-first)."""
+    r = mask.shape[-1]
+    w = num_lane_words(r)
+    pad = w * LANE_WORD_BITS - r
+    if pad:
+        mask = jnp.concatenate(
+            [mask, jnp.zeros(mask.shape[:-1] + (pad,), mask.dtype)], axis=-1)
+    lanes = mask.reshape(mask.shape[:-1] + (w, LANE_WORD_BITS))
+    weights = jnp.uint32(1) << jnp.arange(LANE_WORD_BITS, dtype=jnp.uint32)
+    return (lanes.astype(jnp.uint32) * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_lanes(words: jnp.ndarray, num_roots: int) -> jnp.ndarray:
+    """Unpack uint32[..., W] lane words into bool[..., R]."""
+    shifts = jnp.arange(LANE_WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(words.shape[:-1] + (-1,))
+    return flat[..., :num_roots].astype(jnp.bool_)
+
+
+def segment_or(vals: jnp.ndarray, row_ptr: jnp.ndarray) -> jnp.ndarray:
+    """Per-CSR-row bitwise OR of uint32[m, W] edge-lane words -> uint32[n, W].
+
+    CSR rows are contiguous runs of edge slots, so the row-OR is a textbook
+    segmented scan: an inclusive ``lax.associative_scan`` over
+    (word, segment-start-flag) pairs, read out at each row's last slot.
+    Empty rows produce 0. Slots past ``row_ptr[-1]`` (distributed edge-slab
+    padding) only extend the last segment beyond every read-out point, so
+    their values never reach an output row.
+    """
+    m = vals.shape[0]
+    # row starts equal to m (trailing empty rows) must not flag slot m-1
+    flags = jnp.zeros((m,), jnp.bool_).at[row_ptr[:-1]].set(True, mode="drop")
+
+    def comb(a, b):
+        va, fa = a
+        vb, fb = b
+        return jnp.where(fb[..., None], vb, va | vb), fa | fb
+
+    scanned, _ = jax.lax.associative_scan(comb, (vals, flags))
+    deg = row_ptr[1:] - row_ptr[:-1]
+    last = jnp.clip(row_ptr[1:] - 1, 0, m - 1)
+    return jnp.where((deg > 0)[:, None], scanned[last], jnp.uint32(0))
+
+
+def probe_xla(g: CSRGraph, frontier: jnp.ndarray, need: jnp.ndarray,
+              max_pos: int) -> jnp.ndarray:
+    """Word-packed MAX_POS probe, XLA formulation (static unroll).
+
+    For each local vertex, OR the lane words of its first ``max_pos``
+    neighbours, retiring the gather once every needed lane has found a
+    parent. ``pos < deg`` keeps the gather inside real adjacency (pad
+    slots are never read). The result must be masked with ``need`` by the
+    caller.
+    """
+    m = g.m
+    starts = g.row_ptr[:-1]
+    deg = g.deg
+    acc = jnp.zeros_like(need)
+    for pos in range(max_pos):
+        live = ((need & ~acc) != 0).any(axis=-1) & (pos < deg)
+        vadj = g.col_idx[jnp.clip(starts + pos, 0, m - 1)]
+        acc = acc | jnp.where(live[:, None], frontier[vadj], jnp.uint32(0))
+    return acc
+
+
+def bottomup_packed_step(g: CSRGraph, frontier: jnp.ndarray,
+                         visited: jnp.ndarray, bu_sel: jnp.ndarray,
+                         max_pos: int, probe_impl: str) -> jnp.ndarray:
+    """Packed bottom-up: probe + lax.cond-skipped segmented-scan fallback.
+    Returns new frontier bits for bottom-up lanes (already & ~visited)."""
+    need = (~visited) & bu_sel
+    if probe_impl == "pallas":
+        from repro.kernels.msbfs_probe import ops as probe_ops
+        acc = probe_ops.msbfs_probe(g.row_ptr, g.col_idx, frontier, need,
+                                    max_pos=max_pos)
+    else:
+        acc = probe_xla(g, frontier, need, max_pos)
+    found = acc & need
+
+    residue = ((need & ~found) != 0).any(axis=-1) & (g.deg > max_pos)
+
+    def run_fallback(found):
+        pos_e = jnp.arange(g.m, dtype=jnp.int32) - g.row_ptr[g.src_idx]
+        # pos_e < deg keeps pad slots (distributed slab tail) inert: their
+        # src row is already full, so they never contribute
+        act = (residue[g.src_idx] & (pos_e >= max_pos)
+               & (pos_e < g.deg[g.src_idx]))
+        contrib = jnp.where(act[:, None], frontier[g.col_idx], jnp.uint32(0))
+        return found | (segment_or(contrib, g.row_ptr) & need)
+
+    return jax.lax.cond(jnp.any(residue), run_fallback, lambda f: f, found)
+
+
+def topdown_packed_step(g: CSRGraph, frontier: jnp.ndarray,
+                        visited: jnp.ndarray,
+                        td_sel: jnp.ndarray) -> jnp.ndarray:
+    """Packed top-down: every edge lane forwards its col-side frontier words
+    (masked to top-down lanes); per-row segmented OR gathers them. On the
+    symmetrised Graph500 graphs this is exactly the TD expansion — the row
+    owner collects from neighbours whose frontier bit is set."""
+    contrib = frontier[jnp.clip(g.col_idx, 0, frontier.shape[0] - 1)] & td_sel
+    return segment_or(contrib, g.row_ptr) & ~visited
+
+
+def lane_counters(g: CSRGraph, frontier_b: jnp.ndarray,
+                  visited_b: jnp.ndarray):
+    """Per-lane (e_f, v_f, e_u) from unpacked bool[n, R] state. Under
+    sharding these are per-device partials the caller psums."""
+    deg = g.deg.astype(jnp.int32)[:, None]
+    e_f = jnp.sum(jnp.where(frontier_b, deg, 0), axis=0)
+    v_f = jnp.sum(frontier_b, axis=0, dtype=jnp.int32)
+    e_u = jnp.sum(jnp.where(visited_b, 0, deg), axis=0)
+    return e_f, v_f, e_u
+
+
+def select_direction(mode: str, topdown_prev: jnp.ndarray, e_f, v_f, e_u,
+                     n: int, alpha: float, beta: float,
+                     lanes: int) -> jnp.ndarray:
+    """Per-lane TD/BU decision for one layer — shared by all engines.
+    ``n`` is the switch-rule vertex count (the ORIGINAL graph size: the
+    distributed engine passes ``n_orig`` so padded vertices never skew the
+    beta threshold and traces replay the serial controller exactly)."""
+    if mode == "topdown":
+        return jnp.ones((lanes,), jnp.bool_)
+    if mode == "bottomup":
+        return jnp.zeros((lanes,), jnp.bool_)
+    return switch_direction(topdown_prev, e_f, v_f, e_u, n, alpha, beta)
+
+
+def dispatch_packed_step(g: CSRGraph, frontier: jnp.ndarray,
+                         visited: jnp.ndarray, td_sel: jnp.ndarray,
+                         bu_sel: jnp.ndarray, mode: str, max_pos: int,
+                         probe_impl: str) -> jnp.ndarray:
+    """Run the packed TD/BU step(s) for one layer under the lane selectors
+    — shared by the single-batch sweep, the pipelined engine, and the
+    per-device body of the distributed engine (all three must advance
+    frontiers bit-for-bit identically)."""
+    if mode == "topdown":
+        return topdown_packed_step(g, frontier, visited, td_sel)
+    if mode == "bottomup":
+        return bottomup_packed_step(g, frontier, visited, bu_sel,
+                                    max_pos, probe_impl)
+    # middle layers usually have EVERY lane on one side — cond-skip the
+    # other direction's O(m)/O(n*max_pos) work (the packed analog of the
+    # serial controller's lax.cond)
+    zero = jnp.zeros_like(visited)
+    new_td = jax.lax.cond(
+        jnp.any(td_sel != 0),
+        lambda: topdown_packed_step(g, frontier, visited, td_sel),
+        lambda: zero)
+    new_bu = jax.lax.cond(
+        jnp.any(bu_sel != 0),
+        lambda: bottomup_packed_step(g, frontier, visited, bu_sel,
+                                     max_pos, probe_impl),
+        lambda: zero)
+    return new_td | new_bu
+
+
+def queue_claims(lane_qidx: jnp.ndarray, next_root: jnp.ndarray,
+                 queued: jnp.ndarray, queue: jnp.ndarray):
+    """Pending-queue claim rule of the pipelined engines: idle lanes (those
+    with ``lane_qidx >= capacity``) claim consecutive pending queue slots
+    in lane order. Returns ``(claim bool[L], cand int32[L], root int32[L])``
+    — the slot index and root id are only meaningful where ``claim``.
+
+    ONE implementation shared by the single-host and the sharded engine:
+    their lane/queue evolution must stay bit-identical, so the claim rule
+    lives here and only the seat writes are engine-specific.
+    """
+    cap = queue.shape[0]
+    idle = lane_qidx >= cap
+    rank = jnp.cumsum(idle.astype(jnp.int32)) - 1
+    cand = next_root + rank
+    claim = idle & (cand < queued)
+    root = queue[jnp.clip(cand, 0, cap - 1)]
+    return claim, cand, root
+
+
+def adaptive_lane_pool(pending: int, n: int, m: int, max_lanes: int = 256,
+                       state_budget_bytes: int = 64 << 20) -> int:
+    """Pick the bit-lane pool width from queue depth + graph degree stats.
+
+    The ROADMAP "adaptive lane-pool sizing" rung. Rules, in order:
+
+    * never wider than the pending root count, rounded up to a full
+      32-bit lane word (a partial word costs the same as a full one);
+    * average degree tiers the width: sparse graphs run deep, layer-bound
+      sweeps where refill opportunities are frequent and extra lane words
+      amortise over many layers, so they earn wide pools; dense graphs
+      saturate the segmented scan within a few layers, so extra words only
+      inflate every gather — the pool stays near the 64-lane default;
+    * capped so the packed state (frontier + visited ``uint32[n, W]`` plus
+      ``int32 depth[n, lanes]``) stays inside ``state_budget_bytes``.
+
+    Returns a positive multiple of 32 (one full lane word minimum); the
+    engines clamp it down to ``ceil32(pending)`` themselves.
+    """
+    if n < 1:
+        raise ValueError(f"need a non-empty graph, got n={n}")
+    pending = max(int(pending), 1)
+    avg_deg = m / n
+    if avg_deg >= 16.0:
+        tier_cap = 64
+    elif avg_deg >= 4.0:
+        tier_cap = 128
+    else:
+        tier_cap = max_lanes
+    # bytes per lane: frontier + visited cost n/8 B each, depth costs 4n B
+    per_lane = 4.25 * n
+    budget_cap = max(int(state_budget_bytes / per_lane), 1)
+    want = max(1, min(pending, tier_cap, budget_cap, max_lanes))
+    return LANE_WORD_BITS * num_lane_words(want)

@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.core.csr import CSRGraph, to_numpy_adj
 from repro.core.hybrid import bfs
-from repro.core.msbfs import MAX_LANES, msbfs_pipelined
+from repro.core.msbfs import MAX_LANES, adaptive_lane_pool, msbfs_pipelined
 from repro.graph.generator import rmat_graph, sample_roots
 from repro.graph.validate import validate_bfs_tree
 
@@ -47,6 +47,7 @@ class Graph500Result:
     mode: str
     batched: bool = False
     lanes: int = 0               # bit-lane pool size of the batched engine
+    ndev: int = 1                # devices the batched engine was sharded over
     teps: list[float] = field(default_factory=list)
     times: list[float] = field(default_factory=list)
     traversed: list[int] = field(default_factory=list)
@@ -67,7 +68,7 @@ class Graph500Result:
         t = np.asarray(self.teps)
         return dict(scale=self.scale, edgefactor=self.edgefactor,
                     mode=self.mode, batched=self.batched, lanes=self.lanes,
-                    nroots=len(self.traversed),
+                    ndev=self.ndev, nroots=len(self.traversed),
                     harmonic_mean_teps=self.harmonic_mean_teps,
                     aggregate_teps=self.aggregate_teps,
                     mean_teps=float(t.mean()) if len(t) else 0.0,
@@ -83,7 +84,8 @@ def run_graph500(scale: int, edgefactor: int, mode: str = "hybrid",
                  skip_empty_fallback: bool = True, td_impl: str = "edge",
                  graph: CSRGraph | None = None,
                  batched: bool = False,
-                 lanes: int = MAX_LANES) -> Graph500Result:
+                 lanes: int | None = MAX_LANES,
+                 ndev: int = 1, mesh=None) -> Graph500Result:
     g = graph if graph is not None else rmat_graph(scale, edgefactor, seed)
     roots = sample_roots(g, num_roots, seed=seed + 1)
     if batched:
@@ -92,7 +94,11 @@ def run_graph500(scale: int, edgefactor: int, mode: str = "hybrid",
                 "batched=True does not support td_impl/skip_empty_fallback "
                 "(the MS-BFS sweep has its own step formulations)")
         return _run_batched(g, roots, scale, edgefactor, mode, alpha, beta,
-                            max_pos, probe_impl, warmup, validate, lanes)
+                            max_pos, probe_impl, warmup, validate, lanes,
+                            ndev, mesh)
+    if ndev > 1 or mesh is not None:
+        raise ValueError("ndev > 1 requires batched=True (the sharded "
+                         "engine is the MS-BFS one)")
     res = Graph500Result(scale=scale, edgefactor=edgefactor, mode=mode)
 
     run = lambda r: bfs(g, r, mode, alpha, beta, max_pos, probe_impl,
@@ -118,24 +124,46 @@ def run_graph500(scale: int, edgefactor: int, mode: str = "hybrid",
 def _run_batched(g: CSRGraph, roots: np.ndarray, scale: int, edgefactor: int,
                  mode: str, alpha: float, beta: float, max_pos: int,
                  probe_impl: str, warmup: bool, validate: bool,
-                 lanes: int) -> Graph500Result:
+                 lanes: int | None, ndev: int = 1,
+                 mesh=None) -> Graph500Result:
     """ALL roots in one pipelined MS-BFS engine invocation.
 
     Roots stream through a pool of ``lanes`` bit-lanes: a finished lane is
     refilled from the pending queue on the next layer, so R > lanes costs
     extra traversal layers but no batch barrier and no extra compilation.
+    ``lanes=None`` (or 0) sizes the pool adaptively from the root count
+    and the graph's degree stats (``adaptive_lane_pool``).
+
+    ``ndev > 1`` (or an explicit ``mesh``) runs the SHARDED engine
+    (``repro.core.dist_msbfs``): the graph is 1-D partitioned and each
+    device traverses its row block, frontiers OR-merged per layer. Needs
+    that many jax devices (CI forces host devices via XLA_FLAGS).
 
     The result's ``mode`` records the MS-BFS controller actually executed
     (there is no packed nosimd variant — comparing a serial ``*_nosimd``
     run against a batched one would cross the paper's SIMD axis silently).
     """
     msbfs_mode = _BATCHED_MODE[mode]
-    res = Graph500Result(scale=scale, edgefactor=edgefactor,
-                         mode=msbfs_mode, batched=True, lanes=lanes)
-    rp_ci = to_numpy_adj(g) if validate else None
+    if not lanes:
+        lanes = adaptive_lane_pool(len(roots), g.n, g.m)
     batch = jnp.asarray(roots, dtype=jnp.int32)
-    run = lambda: msbfs_pipelined(g, batch, msbfs_mode, alpha, beta,
-                                  max_pos, probe_impl, lanes)
+    if ndev > 1 or mesh is not None:
+        from repro.core.dist_msbfs import (dist_msbfs, host_mesh,
+                                           partition_graph)
+        if mesh is None:
+            mesh = host_mesh(ndev)
+        else:
+            ndev = int(np.prod(mesh.devices.shape))
+        dg = partition_graph(g, ndev)
+        run = lambda: dist_msbfs(dg, batch, mesh, msbfs_mode, alpha, beta,
+                                 max_pos, probe_impl, lanes=lanes)
+    else:
+        run = lambda: msbfs_pipelined(g, batch, msbfs_mode, alpha, beta,
+                                      max_pos, probe_impl, lanes)
+    res = Graph500Result(scale=scale, edgefactor=edgefactor,
+                         mode=msbfs_mode, batched=True, lanes=lanes,
+                         ndev=ndev)
+    rp_ci = to_numpy_adj(g) if validate else None
     if warmup:
         jax.block_until_ready(run())  # compile once per (shape, R, lanes)
     t0 = time.perf_counter()

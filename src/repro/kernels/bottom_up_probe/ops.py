@@ -6,7 +6,6 @@
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.kernels.common import interpret_default
 from repro.kernels.bottom_up_probe.kernel import bottom_up_probe_pallas

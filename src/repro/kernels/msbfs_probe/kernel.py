@@ -63,18 +63,24 @@ def msbfs_probe_pallas(starts: jnp.ndarray, deg: jnp.ndarray,
     words, per vertex and word plane, retired per plane once ``need`` is
     fully served.
 
-    Shapes: starts/deg int32[n]; need_words/frontier_words uint32[n, W]
-    (uint32[n] accepted as W=1 and returned flat); col_idx int32[m]. n is
-    padded to a multiple of 1024 internally; W is a static grid dimension.
+    Shapes: starts/deg int32[n]; need_words uint32[n, W] (uint32[n]
+    accepted as W=1 and returned flat); col_idx int32[m];
+    frontier_words uint32[nf, W] where nf >= n — the distributed engine
+    probes a LOCAL row block (n = n_loc) against the FULL replicated
+    frontier (nf = global n), with ``col_idx`` holding global neighbour
+    ids. Single-host callers pass nf == n. Both row counts are padded to a
+    multiple of 1024 internally; W is a static grid dimension.
     """
     flat = need_words.ndim == 1
     if flat:
         need_words = need_words[:, None]
         frontier_words = frontier_words[:, None]
     n, w = need_words.shape
+    nf = frontier_words.shape[0]
     m = col_idx.shape[0]
     n_pad = cdiv(n, TILE) * TILE
     pad = n_pad - n
+    nf_pad = cdiv(nf, TILE) * TILE
 
     def pad1(x, value=0):
         return jnp.pad(x, (0, pad), constant_values=value) if pad else x
@@ -84,8 +90,8 @@ def msbfs_probe_pallas(starts: jnp.ndarray, deg: jnp.ndarray,
     # plane-major [W, ...] so the w grid index selects a contiguous plane
     need2 = jnp.pad(need_words, ((0, pad), (0, 0))).T.reshape(
         w, -1, SUBLANES, LANES)
-    fp = jnp.pad(frontier_words, ((0, pad), (0, 0))).T  # [W, n_pad]; padded
-    # rows keep gathers of padded vadj safe
+    fp = jnp.pad(frontier_words, ((0, nf_pad - nf), (0, 0))).T  # [W, nf_pad]
+    # padded rows keep gathers of padded/sentinel vadj safe
 
     tiles = n_pad // TILE
     grid = (w, tiles)
@@ -93,7 +99,7 @@ def msbfs_probe_pallas(starts: jnp.ndarray, deg: jnp.ndarray,
     plane_tile_spec = pl.BlockSpec((1, 1, SUBLANES, LANES),
                                    lambda pw, i: (pw, i, 0, 0))
     full_col = pl.BlockSpec(col_idx.shape, lambda pw, i: (0,))
-    plane_fp = pl.BlockSpec((1, n_pad), lambda pw, i: (pw, 0))
+    plane_fp = pl.BlockSpec((1, nf_pad), lambda pw, i: (pw, 0))
 
     acc = pl.pallas_call(
         functools.partial(_msbfs_probe_kernel, max_pos=max_pos, m=m),

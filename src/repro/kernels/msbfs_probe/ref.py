@@ -7,8 +7,10 @@ import jax.numpy as jnp
 def msbfs_probe_ref(starts, deg, need_words, col_idx, frontier_words,
                     max_pos: int = 8):
     """Identical math to the kernel, plain jnp. Accepts uint32[n, W] word
-    planes (or uint32[n] as W=1); retirement is per plane, elementwise —
-    a plane keeps gathering only while ITS need bits are unserved."""
+    planes (or uint32[n] as W=1); ``frontier_words`` may have MORE rows
+    than ``need_words`` (distributed local-block probe against the full
+    replicated frontier). Retirement is per plane, elementwise — a plane
+    keeps gathering only while ITS need bits are unserved."""
     flat = need_words.ndim == 1
     if flat:
         need_words = need_words[:, None]

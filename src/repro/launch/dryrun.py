@@ -12,7 +12,7 @@ from pathlib import Path  # noqa: E402
 import jax           # noqa: E402
 import numpy as np   # noqa: E402
 
-from repro.configs.base import (get_arch, input_specs, list_archs,  # noqa: E402
+from repro.configs.base import (get_arch, list_archs,  # noqa: E402
                                 make_step, step_arg_specs)
 from repro.distributed.sharding import tree_shardings  # noqa: E402
 from repro.launch.mesh import make_production_mesh     # noqa: E402

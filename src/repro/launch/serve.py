@@ -24,7 +24,6 @@ def serve_lm(arch, requests: int, prompt_len: int, new_tokens: int, seed=0):
     params, _ = init_fn(jax.random.PRNGKey(seed))
     toks = jax.random.randint(jax.random.PRNGKey(seed + 1),
                               (requests, prompt_len), 0, cfg.vocab)
-    max_len = prompt_len + new_tokens
 
     prefill = jax.jit(lambda p, t: lm_prefill(p, t, cfg))
     decode = jax.jit(lambda p, tok, cache, ln: lm_decode_step(

@@ -8,7 +8,12 @@ while the other lanes keep traversing. Latency is measured in engine
 *layers* (the deterministic unit of work), so runs are reproducible.
 
   PYTHONPATH=src python -m repro.launch.serve_bfs --scale 12 --lanes 32 \
-      --queries 96 --burst 8 --every 2 [--validate]
+      --queries 96 --burst 8 --every 2 [--validate] [--ndev 4]
+
+``--lanes 0`` sizes the bit-lane pool adaptively from the query count and
+the graph's degree stats; ``--ndev N`` serves the SAME loop on the sharded
+engine (``repro.core.dist_msbfs``) over N devices (force host devices with
+XLA_FLAGS=--xla_force_host_platform_device_count=N before launch).
 
 Reports per-query sojourn layers (arrival -> answer), lane occupancy, and
 aggregate TEPS of the whole serving window.
@@ -23,25 +28,59 @@ import jax
 import numpy as np
 
 from repro.core.hybrid import ALPHA_DEFAULT, BETA_DEFAULT
-from repro.core.msbfs import (msbfs_engine_enqueue, msbfs_engine_idle,
-                              msbfs_engine_init, msbfs_engine_result,
-                              msbfs_engine_step)
+from repro.core.msbfs import (adaptive_lane_pool, msbfs_engine_enqueue,
+                              msbfs_engine_idle, msbfs_engine_init,
+                              msbfs_engine_result, msbfs_engine_step)
 from repro.graph.generator import rmat_graph, sample_roots
 from repro.graph.validate import validate_bfs_tree
 
 
+def _engine(g, mode: str, probe_impl: str, ndev: int):
+    """(init, enqueue, step, idle, result) for the chosen engine — the
+    serving loop is engine-agnostic; only these five calls differ between
+    the single-host and the sharded pipelined engine."""
+    if ndev <= 1:
+        return (
+            lambda cap, lanes: msbfs_engine_init(g, capacity=cap,
+                                                 lanes=lanes),
+            msbfs_engine_enqueue,
+            lambda s: msbfs_engine_step(g, s, mode, ALPHA_DEFAULT,
+                                        BETA_DEFAULT, 8, probe_impl),
+            msbfs_engine_idle,
+            lambda s: msbfs_engine_result(g, s),
+        )
+    from repro.core import dist_msbfs as dm
+    mesh = dm.host_mesh(ndev)
+    dg = dm.partition_graph(g, ndev)
+    return (
+        lambda cap, lanes: dm.dist_msbfs_engine_init(dg, mesh, cap, lanes),
+        dm.dist_msbfs_engine_enqueue,
+        lambda s: dm.dist_msbfs_engine_step(dg, s, mesh, mode,
+                                            ALPHA_DEFAULT, BETA_DEFAULT, 8,
+                                            probe_impl),
+        dm.dist_msbfs_engine_idle,
+        lambda s: dm.dist_msbfs_engine_result(dg, s, mesh),
+    )
+
+
 def serve(g, roots: np.ndarray, lanes: int, burst: int, every: int,
           mode: str = "hybrid", probe_impl: str = "xla",
-          validate: bool = False) -> dict:
+          validate: bool = False, ndev: int = 1) -> dict:
     """Feed ``roots`` to the engine ``burst`` at a time every ``every``
-    layers; run until all are answered. Returns serving statistics."""
+    layers; run until all are answered. Returns serving statistics.
+    ``lanes=0`` picks the pool width adaptively; ``ndev>1`` runs the
+    sharded engine."""
     num_q = len(roots)
     if num_q < 1:
         raise ValueError("need at least one query")
     if burst < 1 or every < 1:
         raise ValueError(f"burst and every must be >= 1, "
                          f"got burst={burst} every={every}")
-    state = msbfs_engine_init(g, capacity=num_q, lanes=lanes)
+    if not lanes:
+        lanes = adaptive_lane_pool(num_q, g.n, g.m)
+    eng_init, eng_enqueue, eng_step, eng_idle, eng_result = _engine(
+        g, mode, probe_impl, ndev)
+    state = eng_init(num_q, lanes)
 
     arrival = np.full(num_q, -1, np.int64)   # layer each query arrived
     answered = np.full(num_q, -1, np.int64)  # layer each query was answered
@@ -49,24 +88,20 @@ def serve(g, roots: np.ndarray, lanes: int, burst: int, every: int,
 
     def enqueue(s, lo, hi, layer):
         arrival[lo:hi] = layer
-        return msbfs_engine_enqueue(s, roots[lo:hi])
-
-    def step(s):
-        return msbfs_engine_step(g, s, mode, ALPHA_DEFAULT, BETA_DEFAULT,
-                                 8, probe_impl)
+        return eng_enqueue(s, roots[lo:hi])
 
     # warm the step executable on a throwaway state so the serving window
     # measures traversal, not one-time XLA compilation (same discipline as
     # the graph500 harness's warmup)
     jax.block_until_ready(
-        step(msbfs_engine_enqueue(state, roots[:1])).out_depth)
+        eng_step(eng_enqueue(state, roots[:1])).out_depth)
 
     state = enqueue(state, 0, min(burst, num_q), 0)
     fed = min(burst, num_q)
     layer = 0
     t0 = time.perf_counter()
-    while fed < num_q or not msbfs_engine_idle(state):
-        state = step(state)
+    while fed < num_q or not eng_idle(state):
+        state = eng_step(state)
         layer += 1
         occupancy.append(int(np.sum(np.asarray(state.lane_qidx) < num_q)))
         done = np.asarray(state.out_layers[:num_q]) > 0
@@ -78,7 +113,7 @@ def serve(g, roots: np.ndarray, lanes: int, burst: int, every: int,
     jax.block_until_ready(state.out_depth)
     wall = time.perf_counter() - t0
 
-    out = msbfs_engine_result(g, state)
+    out = eng_result(state)
     if validate:
         from repro.core.csr import to_numpy_adj
         rp, ci = to_numpy_adj(g)
@@ -89,7 +124,8 @@ def serve(g, roots: np.ndarray, lanes: int, burst: int, every: int,
     sojourn = answered - arrival
     edges = int(np.asarray(out.edges_traversed).sum()) // 2
     return dict(
-        queries=num_q, lanes=lanes, layers=layer, wall_s=round(wall, 4),
+        queries=num_q, lanes=lanes, ndev=ndev, layers=layer,
+        wall_s=round(wall, 4),
         sojourn_layers=dict(
             mean=float(sojourn.mean()), p50=float(np.percentile(sojourn, 50)),
             p95=float(np.percentile(sojourn, 95)), max=int(sojourn.max())),
@@ -103,7 +139,11 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scale", type=int, default=12)
     ap.add_argument("--edgefactor", type=int, default=16)
-    ap.add_argument("--lanes", type=int, default=32)
+    ap.add_argument("--lanes", type=int, default=32,
+                    help="bit-lane pool size; 0 = adaptive from queue "
+                         "depth + degree stats")
+    ap.add_argument("--ndev", type=int, default=1,
+                    help="shard the engine over this many devices")
     ap.add_argument("--queries", type=int, default=96)
     ap.add_argument("--burst", type=int, default=8,
                     help="queries arriving per burst")
@@ -120,7 +160,7 @@ def main():
     roots = sample_roots(g, args.queries, seed=args.seed + 1)
     stats = serve(g, roots, args.lanes, args.burst, args.every,
                   mode=args.mode, probe_impl=args.probe_impl,
-                  validate=args.validate)
+                  validate=args.validate, ndev=args.ndev)
     print(json.dumps(stats, indent=2))
 
 

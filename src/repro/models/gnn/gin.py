@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
-from repro.models.gnn.common import GraphBatch, aggregate, graph_pool
+from repro.models.gnn.common import GraphBatch, graph_pool
 
 
 @dataclass(frozen=True)

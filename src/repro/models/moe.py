@@ -20,7 +20,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed.sharding import constrain
 from repro.models.layers import _dense_init
 
 

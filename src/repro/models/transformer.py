@@ -12,8 +12,7 @@ Design points:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -15,13 +15,12 @@ Fault-tolerance model (DESIGN §5):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any
+from dataclasses import dataclass
 
 import jax
 import numpy as np
 
-from repro.configs.base import (Arch, Shape, make_step, param_builders,
+from repro.configs.base import (Arch, make_step, param_builders,
                                 step_arg_specs)
 from repro.data.pipeline import make_batch
 from repro.distributed.sharding import tree_shardings

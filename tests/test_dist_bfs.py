@@ -17,9 +17,11 @@ for g in [rmat_graph(9, 8, seed=0), uniform_random_graph(333, 2000, seed=4)]:
     for mesh in meshes:
         for mode in ['hybrid', 'topdown', 'bottomup']:
             for r in roots:
-                par, layers = dist_bfs(dg, int(r), mesh, mode)
-                pref, _ = bfs_reference(rp, ci, int(r))
-                assert (np.asarray(par) == pref).all(), (mode, int(r))
+                res = dist_bfs(dg, int(r), mesh, mode)
+                pref, dref = bfs_reference(rp, ci, int(r))
+                assert (np.asarray(res.parent) == pref).all(), (mode, int(r))
+                assert (np.asarray(res.depth) == dref).all(), (mode, int(r))
+                assert int(res.num_layers) >= int(dref.max())
 print('DIST_OK')
 """
 
@@ -40,9 +42,10 @@ rp, ci = to_numpy_adj(g)
 mesh = jax.make_mesh((4, 2), ('data', 'model'))
 dg = partition_graph(g, 8)
 r = int(sample_roots(g, 1, seed=1)[0])
-par, _ = dist_bfs(dg, r, mesh, 'hybrid', probe_impl='pallas')
-pref, _ = bfs_reference(rp, ci, r)
-assert (np.asarray(par) == pref).all()
+res = dist_bfs(dg, r, mesh, 'hybrid', probe_impl='pallas')
+pref, dref = bfs_reference(rp, ci, r)
+assert (np.asarray(res.parent) == pref).all()
+assert (np.asarray(res.depth) == dref).all()
 print('PALLAS_DIST_OK')
 """
 

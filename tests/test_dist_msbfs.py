@@ -1,0 +1,198 @@
+"""Cross-engine equivalence for the sharded MS-BFS engine.
+
+``dist_msbfs`` at ndev ∈ {1, 2, 4} must equal the single-host pipelined
+engine AND serial BFS per lane — depths, parents, num_layers, edge counts
+and the per-root TD/BU traces — on the property-suite graph shapes
+(random / star / path / disconnected components, with self-loops and
+duplicate edges), every lane validator-clean. Multi-device runs execute
+in a subprocess with forced host devices (conftest pattern); the
+adaptive-pool sizing unit tests run in-process.
+"""
+import pytest
+from conftest import run_in_subprocess
+
+from repro.core.packed import adaptive_lane_pool
+
+CODE = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+import sys
+sys.path.insert(0, {testdir!r})
+from test_msbfs_properties import build_case
+from repro.core.dist_msbfs import partition_graph, dist_msbfs
+from repro.core.msbfs import msbfs_pipelined
+from repro.core.ref import bfs_reference
+from repro.core.csr import to_numpy_adj
+from repro.graph.validate import validate_bfs_tree
+
+CASES = [  # n, m, seed, shape, self_loops, dup_edges
+    (40, 120, 0, "random", False, False),
+    (33, 50, 1, "random", True, True),
+    (25, 0, 3, "star", True, False),
+    (64, 0, 4, "path", False, True),
+    (48, 80, 6, "two_components", False, False),
+]
+devs = jax.devices()
+for n, m, seed, shape, self_loops, dup_edges in CASES:
+    g, roots = build_case(n, m, seed, shape, self_loops, dup_edges)
+    rp, ci = to_numpy_adj(g)
+    roots_j = jnp.asarray(roots, jnp.int32)
+    lanes = max(1, len(roots) // 2)   # lanes < R -> queue refill exercised
+    host = msbfs_pipelined(g, roots_j, "hybrid", lanes=lanes)
+    for ndev in (1, 2, 4):
+        dg = partition_graph(g, ndev)
+        mesh = Mesh(np.asarray(devs[:ndev]), ("data",))
+        out = dist_msbfs(dg, roots_j, mesh, "hybrid", lanes=lanes)
+        tag = (shape, seed, ndev)
+        for f in ("parent", "depth", "num_layers", "edges_traversed",
+                  "trace_dir", "trace_vf", "trace_ef", "trace_eu"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(out, f)), np.asarray(getattr(host, f)),
+                err_msg=f"{{f}} {{tag}}")
+        for i, r in enumerate(roots):
+            pref, dref = bfs_reference(rp, ci, int(r))
+            np.testing.assert_array_equal(np.asarray(out.depth[:, i]),
+                                          dref, err_msg=f"depth {{tag}}")
+            np.testing.assert_array_equal(np.asarray(out.parent[:, i]),
+                                          pref, err_msg=f"parent {{tag}}")
+            validate_bfs_tree(rp, ci, np.asarray(out.parent[:, i]), int(r))
+print("DIST_MSBFS_OK")
+"""
+
+
+def test_dist_msbfs_matches_host_engine_and_serial():
+    import os
+    testdir = os.path.dirname(os.path.abspath(__file__))
+    out = run_in_subprocess(CODE.format(testdir=testdir), devices=4)
+    assert "DIST_MSBFS_OK" in out
+
+
+MODES_CODE = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.dist_msbfs import partition_graph, dist_msbfs
+from repro.core.msbfs import msbfs_pipelined
+from repro.graph.generator import rmat_graph, sample_roots
+
+g = rmat_graph(8, 8, seed=2)
+roots = jnp.asarray(sample_roots(g, 6, seed=3), jnp.int32)
+dg = partition_graph(g, 4)
+mesh = Mesh(np.asarray(jax.devices()[:4]), ("data",))
+for mode in ("topdown", "bottomup"):
+    out = dist_msbfs(dg, roots, mesh, mode, lanes=4)
+    host = msbfs_pipelined(g, roots, mode, lanes=4)
+    np.testing.assert_array_equal(np.asarray(out.depth),
+                                  np.asarray(host.depth), err_msg=mode)
+    np.testing.assert_array_equal(np.asarray(out.parent),
+                                  np.asarray(host.parent), err_msg=mode)
+# pallas probe through the sharded bottom-up path
+out = dist_msbfs(dg, roots, mesh, "hybrid", probe_impl="pallas", lanes=4)
+host = msbfs_pipelined(g, roots, "hybrid", probe_impl="pallas", lanes=4)
+np.testing.assert_array_equal(np.asarray(out.depth), np.asarray(host.depth))
+np.testing.assert_array_equal(np.asarray(out.parent),
+                              np.asarray(host.parent))
+print("DIST_MODES_OK")
+"""
+
+
+def test_dist_msbfs_forced_modes_and_pallas_probe():
+    out = run_in_subprocess(MODES_CODE, devices=4)
+    assert "DIST_MODES_OK" in out
+
+
+STREAM_CODE = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.dist_msbfs import (
+    partition_graph, dist_msbfs_engine_init, dist_msbfs_engine_enqueue,
+    dist_msbfs_engine_step, dist_msbfs_engine_idle,
+    dist_msbfs_engine_result)
+from repro.core.ref import bfs_reference
+from repro.core.csr import to_numpy_adj
+from repro.graph.generator import rmat_graph, sample_roots
+
+g = rmat_graph(8, 8, seed=5)
+rp, ci = to_numpy_adj(g)
+roots = sample_roots(g, 8, seed=6)
+dg = partition_graph(g, 2)
+mesh = Mesh(np.asarray(jax.devices()[:2]), ("data",))
+state = dist_msbfs_engine_init(dg, mesh, capacity=8, lanes=2)
+state = dist_msbfs_engine_enqueue(state, roots[:4])
+fed, steps = 4, 0
+while fed < 8 or not dist_msbfs_engine_idle(state):
+    state = dist_msbfs_engine_step(dg, state, mesh, "hybrid")
+    steps += 1
+    if steps == 3 and fed < 8:                 # mid-sweep arrivals
+        state = dist_msbfs_engine_enqueue(state, roots[4:])
+        fed = 8
+    assert steps < 500
+out = dist_msbfs_engine_result(dg, state, mesh)
+for i, r in enumerate(roots):
+    pref, dref = bfs_reference(rp, ci, int(r))
+    np.testing.assert_array_equal(np.asarray(out.depth[:, i]), dref)
+    np.testing.assert_array_equal(np.asarray(out.parent[:, i]), pref)
+print("DIST_STREAM_OK")
+"""
+
+
+def test_dist_msbfs_streaming_enqueue_mid_sweep():
+    out = run_in_subprocess(STREAM_CODE, devices=4)
+    assert "DIST_STREAM_OK" in out
+
+
+def test_adaptive_lane_pool_rules():
+    # full-word granularity, bounded below by one word
+    assert adaptive_lane_pool(1, 1000, 4000) == 32
+    assert adaptive_lane_pool(40, 1000, 100) == 64
+    # never (usefully) wider than pending, monotone in pending
+    sparse = [adaptive_lane_pool(p, 10_000, 20_000) for p in (8, 64, 500)]
+    assert sparse == sorted(sparse)
+    assert sparse[-1] == 256                       # sparse earns max_lanes
+    # dense graphs cap at the 64-lane default tier
+    assert adaptive_lane_pool(500, 10_000, 20 * 10_000) == 64
+    # mid-density tier
+    assert adaptive_lane_pool(500, 10_000, 8 * 10_000) == 128
+    # state budget caps huge graphs regardless of pending
+    big = adaptive_lane_pool(10_000, 200_000_000, 16 * 200_000_000,
+                             state_budget_bytes=64 << 20)
+    assert big == 32
+    with pytest.raises(ValueError):
+        adaptive_lane_pool(4, 0, 0)
+
+
+def test_adaptive_lane_pool_flows_through_harness():
+    """lanes=0/None surfaces: graph500 batched + serve_bfs pick the pool."""
+    from repro.graph.generator import rmat_graph
+    from repro.graph.graph500 import run_graph500
+    g = rmat_graph(8, 8, seed=0)
+    res = run_graph500(8, 8, num_roots=16, graph=g, batched=True,
+                       lanes=None, warmup=False)
+    assert res.lanes == adaptive_lane_pool(16, g.n, g.m)
+    assert res.summary()["lanes"] == res.lanes
+
+
+DIST_BFS_DEPTH_CODE = """
+import numpy as np, jax
+from repro.core.dist_bfs import partition_graph, dist_bfs
+from repro.core.ref import bfs_reference
+from repro.core.csr import to_numpy_adj
+from repro.graph.generator import rmat_graph, sample_roots
+
+g = rmat_graph(8, 8, seed=1)
+rp, ci = to_numpy_adj(g)
+dg = partition_graph(g, 4)
+mesh = jax.make_mesh((4,), ("data",))
+r = int(sample_roots(g, 1, seed=2)[0])
+res = dist_bfs(dg, r, mesh, "hybrid")
+pref, dref = bfs_reference(rp, ci, r)
+np.testing.assert_array_equal(np.asarray(res.parent), pref)
+np.testing.assert_array_equal(np.asarray(res.depth), dref)
+unreached = np.asarray(res.parent) < 0
+assert (np.asarray(res.depth)[unreached] == -1).all()   # MSBFS sentinel
+print("DIST_BFS_DEPTH_OK")
+"""
+
+
+def test_dist_bfs_returns_depth_with_msbfs_sentinel():
+    out = run_in_subprocess(DIST_BFS_DEPTH_CODE, devices=4)
+    assert "DIST_BFS_DEPTH_OK" in out

@@ -59,6 +59,31 @@ def test_msbfs_probe_lane_word_sweep(lane_words, max_pos):
     np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
 
 
+@pytest.mark.parametrize("lane_words", [1, 3])
+def test_msbfs_probe_local_block_full_frontier(lane_words):
+    """Distributed shape: need covers a LOCAL row block, frontier the full
+    vertex range, col_idx global ids (+ sentinel pads) — kernel == oracle.
+    This is exactly what dist_msbfs feeds the probe under shard_map."""
+    g = rmat_graph(8, 6, seed=lane_words)
+    from repro.core.dist_bfs import partition_graph
+    dg = partition_graph(g, 2)
+    rng = np.random.default_rng(lane_words)
+    fro = jnp.asarray(rng.integers(0, 2 ** 32, (dg.n, lane_words),
+                                   dtype=np.uint32))
+    for d in range(2):
+        row_ptr = dg.row_ptr[d]
+        starts, deg = row_ptr[:-1], row_ptr[1:] - row_ptr[:-1]
+        n_loc = dg.n // 2
+        need = jnp.asarray(rng.integers(0, 2 ** 32, (n_loc, lane_words),
+                                        dtype=np.uint32))
+        a1 = msbfs_probe_pallas(starts, deg, need, dg.col_idx[d], fro,
+                                max_pos=4, interpret=True)
+        a2 = msbfs_probe_ref(starts, deg, need, dg.col_idx[d], fro,
+                             max_pos=4)
+        assert a1.shape == (n_loc, lane_words)
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
 def test_msbfs_probe_flat_plane_compat():
     """uint32[n] single planes still round-trip (W=1 fast path)."""
     g = rmat_graph(7, 8, seed=9)

@@ -8,7 +8,7 @@ import pytest
 from repro.models import layers as L
 from repro.models.moe import MoEConfig, moe_ffn, moe_ffn_dense_ref, moe_init
 from repro.models.transformer import (LMConfig, init_lm, lm_decode_step,
-                                      lm_forward, lm_loss, lm_prefill)
+                                      lm_forward, lm_prefill)
 
 
 def _rot(a, b, c):
@@ -174,8 +174,7 @@ def test_gnn_grads_flow():
 
 def test_dien_augru_attention_effect():
     """Zero attention on history -> final interest is the zero init state."""
-    from repro.models.recsys.dien import (DIENConfig, _evolution, _gru_cell,
-                                          init_dien)
+    from repro.models.recsys.dien import DIENConfig, _evolution, init_dien
     cfg = DIENConfig(n_items=100, n_cats=5, n_profiles=10, seq_len=4)
     p, _ = init_dien(jax.random.PRNGKey(0), cfg)
     b, t = 3, 4

@@ -1,5 +1,4 @@
 """Unit tests for the loop-aware HLO roofline parser."""
-import numpy as np
 
 from repro.launch.roofline import (_loop_multipliers, _split_computations,
                                    _type_bytes, parse_collectives,

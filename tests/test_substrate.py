@@ -1,11 +1,8 @@
 """Substrate tests: checkpoint atomicity/corruption, optimizer math,
 gradient compression, sharding resolver, sampler."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.distributed.compression import (compress_tree, decompress_tree,
                                            init_error_state)

@@ -1,7 +1,6 @@
 """End-to-end behaviour tests for the paper's system (Graph500 harness,
 hybrid switching, MAX_POS claim, trainer fault tolerance, elastic re-mesh)."""
 import numpy as np
-import pytest
 
 from conftest import run_in_subprocess
 
