@@ -7,6 +7,8 @@
 #   make bench-smoke      MS-BFS TEPS curve (R=64/128/256) at a small scale
 #   make bench            the same at the paper-protocol scale 14
 #   make bench-dist       sharded MS-BFS scaling curve (ndev 1/2/4)
+#   make bench-analytics  analytics workloads (components/closeness/khop)
+#                         TEPS-equivalent throughput on the lane engine
 #   make ci-bench         fast benches -> BENCH_pr.json + regression gate
 #   make lint             ruff check + format check (rule set: ruff.toml)
 
@@ -14,7 +16,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-properties test-dist bench-smoke bench bench-dist \
-        ci-bench lint
+        bench-analytics ci-bench lint
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -25,7 +27,8 @@ test-properties:
 
 test-dist:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 $(PYTHON) -m pytest \
-	    tests/test_dist_bfs.py tests/test_dist_msbfs.py -q
+	    tests/test_dist_bfs.py tests/test_dist_msbfs.py \
+	    tests/test_analytics.py::test_analytics_ndev2_parity -q
 
 bench-smoke:
 	$(PYTHON) benchmarks/msbfs_teps.py --scale 10
@@ -35,6 +38,9 @@ bench:
 
 bench-dist:
 	$(PYTHON) benchmarks/dist_msbfs_teps.py --scale 12
+
+bench-analytics:
+	$(PYTHON) benchmarks/analytics_bench.py --scale 12
 
 ci-bench:
 	$(PYTHON) benchmarks/ci_bench.py --out BENCH_pr.json \

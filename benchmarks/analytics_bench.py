@@ -1,0 +1,99 @@
+"""Analytics workload throughput on the lane engine.
+
+One TEPS-equivalent number per workload (higher is better), with the
+compile excluded by a warmup run — the analytics analog of
+``msbfs_teps.py``:
+
+The work numerator is a fixed PROXY per workload — stable across runs by
+construction, which is what the regression gate needs (actual traversal
+work varies with lane/component collisions):
+
+* ``components`` — label the whole graph; numerator = the graph's m/2
+  undirected edges (the labelling floor), NOT per-lane traversal work,
+  so its TEPS-equiv reads far below the raw-traversal points;
+* ``closeness`` — sampled-source centrality; numerator = k * m/2
+  (k traversals, most covering the giant component);
+* ``khop`` — a k-hop query batch (S lanes, sliced at depth <= k after
+  full traversals); numerator = S * m/2.
+
+  PYTHONPATH=src python benchmarks/analytics_bench.py --scale 12
+  PYTHONPATH=src python benchmarks/analytics_bench.py --smoke --json out.json
+
+``--json`` writes {name: teps} points for the CI regression gate
+(``ci_bench.py`` embeds these under ``analytics.*``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# allow `python benchmarks/analytics_bench.py` (sys.path[0] = benchmarks/)
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO not in sys.path:
+    sys.path.insert(0, _REPO)
+
+
+def _timed(fn):
+    """(wall seconds, result) with one warmup call to absorb compiles."""
+    fn()
+    t0 = time.perf_counter()
+    out = fn()
+    return time.perf_counter() - t0, out
+
+
+def bench_points(scale: int, edgefactor: int = 16, seed: int = 0,
+                 batch: int = 64, closeness_sources: int = 64,
+                 khop_sources: int = 64, khop_k: int = 2,
+                 ndev: int = 1) -> dict[str, float]:
+    """TEPS-equivalent throughput per analytics workload at one scale."""
+    from repro.analytics import (LaneEngine, closeness_centrality,
+                                 connected_components, khop_neighborhood)
+    from repro.graph.generator import rmat_graph, sample_roots
+    g = rmat_graph(scale, edgefactor, seed)
+    eng = LaneEngine(g, ndev=ndev, lanes=None)
+    points = {}
+
+    dt, _ = _timed(lambda: connected_components(eng, batch=batch))
+    # labelling work: each component's edges once per covering lane; the
+    # graph total (m/2 undirected edges fully labelled) is the floor
+    points[f"components_s{scale}"] = (g.m // 2) / dt
+
+    k = min(closeness_sources, g.n)
+    dt, _ = _timed(
+        lambda: closeness_centrality(eng, sources=k, seed=1, chunk=batch))
+    # k sampled traversals, most covering the giant component
+    points[f"closeness_s{scale}_k{k}"] = k * (g.m // 2) / dt
+
+    roots = sample_roots(g, khop_sources, seed=2)
+    dt, _ = _timed(lambda: khop_neighborhood(eng, roots, khop_k))
+    points[f"khop_s{scale}_S{len(roots)}_k{khop_k}"] = (
+        len(roots) * (g.m // 2) / dt)
+    return points
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--edgefactor", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ndev", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI point: scale 10")
+    ap.add_argument("--json", default=None, help="write {name: teps} here")
+    args = ap.parse_args()
+
+    scale = 10 if args.smoke else args.scale
+    points = bench_points(scale, args.edgefactor, args.seed, ndev=args.ndev)
+    for name, teps in points.items():
+        print(f"{name:32s} {teps / 1e6:10.2f} MTEPS-equiv")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(points, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,8 @@ Collects one higher-is-better throughput number per benchmark:
   (1e6 / us_per_call — the paper-table analogs have no TEPS axis);
 * MS-BFS aggregate TEPS, serial loop and pipelined batched engine
   (scale 10, R=64);
+* the analytics smoke (components / closeness / khop TEPS-equivalents on
+  the lane engine, ``analytics_bench.bench_points`` at scale 10);
 * the distributed MS-BFS smoke (``dist_msbfs_teps.py --smoke``), run in a
   subprocess so the forced host-device count never leaks into the
   single-device timings.
@@ -62,6 +64,15 @@ def _bench_msbfs(scale: int = 10, roots: int = 64) -> dict:
     return out
 
 
+def _bench_analytics(scale: int = 10) -> dict:
+    """Analytics smoke: components + closeness + khop TEPS-equivalents on
+    the lane engine (``analytics_bench.bench_points``) — the new
+    subsystem's regressions gate exactly like BFS TEPS."""
+    from benchmarks.analytics_bench import bench_points
+    return {f"analytics.{k}": dict(value=v, unit="teps_equiv")
+            for k, v in bench_points(scale).items()}
+
+
 def _bench_dist_smoke() -> dict:
     here = os.path.dirname(os.path.abspath(__file__))
     with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
@@ -113,6 +124,7 @@ def main() -> None:
     benches: dict = {}
     benches.update(_bench_run_py())
     benches.update(_bench_msbfs())
+    benches.update(_bench_analytics())
     if not args.skip_dist:
         benches.update(_bench_dist_smoke())
     pr = dict(tolerance=args.tolerance,

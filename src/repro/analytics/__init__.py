@@ -1,0 +1,36 @@
+"""Lane-parallel graph analytics served on top of the MS-BFS engine.
+
+The paper's hybrid BFS is a building block; this package is the payoff:
+connected components, closeness centrality, k-hop neighbourhood /
+reachability queries, and diameter bounds, all computed by batching
+traversals through the bit-lane engines (``repro.core.msbfs`` on one
+host, ``repro.core.dist_msbfs`` across a mesh) — many analytics
+traversals per packed sweep.
+
+Entry points: build queries from ``api`` (``ComponentsQuery``, ...) and
+dispatch with ``run_query``, or call the workload functions directly
+(``connected_components``, ``closeness_centrality``,
+``khop_neighborhood``, ``reachability``, ``diameter_bounds``). Share one
+``LaneEngine`` across queries to reuse the graph partition and compiled
+sweeps.
+"""
+from repro.analytics.api import (ClosenessQuery, ComponentsQuery,
+                                 DiameterQuery, KHopQuery, QUERY_TYPES,
+                                 run_query)
+from repro.analytics.closeness import (ClosenessResult, closeness_centrality,
+                                       closeness_from_depths)
+from repro.analytics.components import (ComponentsResult,
+                                        connected_components)
+from repro.analytics.diameter import DiameterResult, diameter_bounds
+from repro.analytics.engine import LaneEngine, as_engine
+from repro.analytics.khop import (KHopResult, khop_neighborhood,
+                                  reachability)
+
+__all__ = [
+    "ClosenessQuery", "ClosenessResult", "ComponentsQuery",
+    "ComponentsResult", "DiameterQuery", "DiameterResult", "KHopQuery",
+    "KHopResult", "LaneEngine", "QUERY_TYPES", "as_engine",
+    "closeness_centrality", "closeness_from_depths",
+    "connected_components", "diameter_bounds", "khop_neighborhood",
+    "reachability", "run_query",
+]

@@ -1,0 +1,103 @@
+"""Typed query surface of the analytics subsystem.
+
+One dataclass per workload, one dispatcher. Callers build a query value,
+hand it to ``run_query`` with a graph (or a prebuilt ``LaneEngine``), and
+get the workload's typed result back::
+
+    from repro.analytics import (ComponentsQuery, KHopQuery, LaneEngine,
+                                 run_query)
+
+    eng = LaneEngine(g, ndev=2, lanes=None)       # sharded, adaptive pool
+    comps = run_query(eng, ComponentsQuery())
+    hops = run_query(eng, KHopQuery(sources=(3, 17, 42), k=2))
+
+The engine choice (host vs ``dist_msbfs`` mesh) and the lane-pool sizing
+(``lanes=None`` -> ``packed.adaptive_lane_pool``) live in ``LaneEngine``;
+queries stay pure descriptions, so the serving loop
+(``repro.launch.serve_bfs``) can tag, queue, and account for them per
+type.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.analytics.closeness import ClosenessResult, closeness_centrality
+from repro.analytics.components import (ComponentsResult,
+                                        connected_components)
+from repro.analytics.diameter import DiameterResult, diameter_bounds
+from repro.analytics.engine import as_engine
+from repro.analytics.khop import KHopResult, khop_neighborhood
+
+__all__ = [
+    "ClosenessQuery", "ComponentsQuery", "DiameterQuery", "KHopQuery",
+    "QUERY_TYPES", "run_query",
+]
+
+
+@dataclass(frozen=True)
+class ComponentsQuery:
+    """Connected components of the whole graph."""
+    batch: int = 64              # BFS lanes seeded per sweep
+
+    kind = "components"
+
+
+@dataclass(frozen=True)
+class ClosenessQuery:
+    """Closeness centrality for every vertex.
+
+    ``sources=None`` forces exact, an int samples that many sources,
+    ``"auto"`` (default) picks exact for small n, sampled for large n.
+    """
+    sources: int | str | None = "auto"
+    seed: int = 0
+    chunk: int = 256             # roots per engine sweep
+
+    kind = "closeness"
+
+
+@dataclass(frozen=True)
+class KHopQuery:
+    """All vertices within ``k`` hops of each source (one lane each)."""
+    sources: tuple[int, ...]
+    k: int
+
+    kind = "khop"
+
+
+@dataclass(frozen=True)
+class DiameterQuery:
+    """Diameter lower/upper bounds by double-sweep lane batches."""
+    num_seeds: int = 4
+    sweeps: int = 2
+    seed: int = 0
+
+    kind = "diameter"
+
+
+QUERY_TYPES = (ComponentsQuery, ClosenessQuery, KHopQuery, DiameterQuery)
+
+Query = ComponentsQuery | ClosenessQuery | KHopQuery | DiameterQuery
+Result = ComponentsResult | ClosenessResult | KHopResult | DiameterResult
+
+
+def run_query(g_or_engine, query: Query, **engine_kwargs) -> Result:
+    """Dispatch one analytics query. ``g_or_engine`` is a ``CSRGraph``
+    (engine built from ``engine_kwargs``: ``ndev=``, ``mesh=``,
+    ``lanes=``, ``mode=``, ...) or a shared ``LaneEngine`` — build one
+    engine when issuing several queries so sweeps reuse the partition and
+    compiled executables."""
+    eng = as_engine(g_or_engine, **engine_kwargs)
+    if isinstance(query, ComponentsQuery):
+        return connected_components(eng, batch=query.batch)
+    if isinstance(query, ClosenessQuery):
+        return closeness_centrality(eng, sources=query.sources,
+                                    seed=query.seed, chunk=query.chunk)
+    if isinstance(query, KHopQuery):
+        return khop_neighborhood(eng, list(query.sources), query.k)
+    if isinstance(query, DiameterQuery):
+        return diameter_bounds(eng, num_seeds=query.num_seeds,
+                               sweeps=query.sweeps, seed=query.seed)
+    raise TypeError(f"unknown analytics query type {type(query).__name__!r}"
+                    f" — expected one of "
+                    f"{[t.__name__ for t in QUERY_TYPES]}")

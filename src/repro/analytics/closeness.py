@@ -1,0 +1,119 @@
+"""Closeness centrality from per-lane BFS depths.
+
+Closeness needs distances from many sources — precisely what one MS-BFS
+sweep produces as its ``depth[n, R]`` output. Two estimators share the
+accumulation path:
+
+* **exact** — every vertex is a source, swept in fixed-width chunks
+  through the pipelined engine. Undirected distances are symmetric, so
+  column sums over the chunks accumulate each vertex's distance total.
+* **sampled** — the Eppstein–Wang style estimator over ``k`` sampled
+  sources, scaled by ``n / k``. The scaling is constructed so that
+  sampling ALL vertices reproduces the exact numbers bit-for-bit (the
+  exact-vs-sampled agreement property tested in
+  ``tests/test_analytics.py``).
+
+The closeness definition is the Wasserman–Faust form (as in NetworkX),
+which stays meaningful on disconnected graphs::
+
+    c(v) = (r_v - 1)^2 / (sum_d(v) * (n - 1))
+
+with ``r_v`` the size of v's component (reachable count including v) and
+``sum_d(v)`` the sum of distances from v within its component; isolated
+vertices score 0.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.analytics.engine import as_engine, pad_roots
+
+__all__ = ["ClosenessResult", "closeness_centrality",
+           "closeness_from_depths"]
+
+# auto mode: below this vertex count the exact sweep is cheap enough
+EXACT_N_THRESHOLD = 2048
+SAMPLED_SOURCES_DEFAULT = 256
+
+
+@dataclass(frozen=True)
+class ClosenessResult:
+    closeness: np.ndarray        # float64[n]
+    method: str                  # "exact" | "sampled"
+    num_sources: int
+    seed: int | None
+    meta: dict = field(default_factory=dict)
+
+    def top(self, k: int = 5) -> list[tuple[int, float]]:
+        """The k most central vertices as (vertex, closeness), descending
+        (ties broken by vertex id via the stable argsort)."""
+        order = np.argsort(-self.closeness, kind="stable")[:k]
+        return [(int(v), float(self.closeness[v])) for v in order]
+
+
+def closeness_from_depths(depth: np.ndarray, n: int) -> np.ndarray:
+    """Wasserman–Faust closeness for all n vertices from a depth matrix
+    with one SOURCE PER COLUMN (rows: vertices, -1 unreached) — pass only
+    real source columns, trimming any sweep padding first.
+
+    With n columns (all sources) this IS the exact formula; the
+    ``scale = n / k`` factor extrapolates reach counts and distance sums
+    from a sample. Shared by the offline estimators here and the serving
+    path's closeness queries (``repro.launch.serve_bfs``).
+    """
+    depth = np.asarray(depth, np.int64)
+    reached = depth >= 0
+    cnt = reached.sum(axis=1)                       # sources reaching v
+    sum_d = np.where(reached, depth, 0).sum(axis=1)
+    scale = n / depth.shape[1]
+    r_hat = scale * cnt                              # est. component size
+    s_hat = scale * sum_d                            # est. distance sum
+    out = np.zeros(depth.shape[0], np.float64)
+    ok = (cnt > 0) & (s_hat > 0) & (r_hat > 1)
+    out[ok] = (r_hat[ok] - 1.0) ** 2 / (s_hat[ok] * max(n - 1, 1))
+    return out
+
+
+def closeness_centrality(g_or_engine, sources: int | str | None = "auto",
+                         seed: int = 0, chunk: int = 256,
+                         **engine_kwargs) -> ClosenessResult:
+    """Closeness centrality of every vertex.
+
+    ``sources``: ``None`` forces the exact all-sources computation,
+    an int samples that many distinct source vertices, and ``"auto"``
+    (default) picks exact for small graphs (n <= EXACT_N_THRESHOLD) and a
+    capped sample otherwise — the small-n/large-n dispatch rule of the
+    analytics API. ``chunk`` bounds roots per engine sweep; the last chunk
+    is padded (ignored lanes) so every sweep hits one compiled executable.
+    """
+    eng = as_engine(g_or_engine, **engine_kwargs)
+    n = eng.n
+    if sources == "auto":
+        sources = None if n <= EXACT_N_THRESHOLD else min(
+            n, SAMPLED_SOURCES_DEFAULT)
+    if sources is None:
+        src = np.arange(n, dtype=np.int32)
+        method = "exact"
+    else:
+        k = int(sources)
+        if not 1 <= k <= n:
+            raise ValueError(f"sources must be in [1, {n}], got {k}")
+        rng = np.random.default_rng(seed)
+        src = np.sort(rng.choice(n, size=k, replace=False)).astype(np.int32)
+        method = "sampled" if k < n else "exact"
+    chunk = max(1, min(chunk, src.size))
+
+    depth_cols = np.empty((n, src.size), np.int32)
+    sweeps = 0
+    for lo in range(0, src.size, chunk):
+        real = min(chunk, src.size - lo)
+        res = eng.sweep(pad_roots(src[lo:lo + chunk], chunk))
+        depth_cols[:, lo:lo + real] = np.asarray(res.depth)[:, :real]
+        sweeps += 1
+    closeness = closeness_from_depths(depth_cols, n)
+    return ClosenessResult(
+        closeness=closeness, method=method, num_sources=int(src.size),
+        seed=None if method == "exact" else seed,
+        meta=dict(chunk=chunk, sweeps=sweeps, ndev=eng.ndev))

@@ -1,0 +1,129 @@
+"""Engine facade for the analytics subsystem.
+
+Every analytics workload (components, closeness, k-hop, diameter bounds)
+reduces to the same primitive: *one pipelined MS-BFS sweep over a batch of
+roots, returning per-lane depths*. ``LaneEngine`` is that primitive with
+the host/distributed choice and the lane-pool sizing folded in:
+
+* ``ndev <= 1`` — ``repro.core.msbfs.msbfs_pipelined`` on the full graph;
+* ``ndev > 1`` (or an explicit ``mesh``) — ``repro.core.dist_msbfs`` over
+  a 1-D partition, results trimmed back to the original vertex count, so
+  callers see identical shapes either way (the engines are bit-identical
+  per ``tests/test_dist_msbfs.py``);
+* ``lanes=None`` — adaptive pool sizing per sweep
+  (``packed.adaptive_lane_pool``), exactly the ``lanes=0`` surface of the
+  graph500 / serve_bfs harnesses.
+
+The graph is partitioned ONCE at construction; repeated sweeps (closeness
+chunks, component batches, diameter re-sweeps) reuse the partition and the
+compiled engine executables (one compile per distinct root-batch size —
+the algorithms pad their batches to a fixed width for exactly this
+reason).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.csr import CSRGraph
+from repro.core.hybrid import ALPHA_DEFAULT, BETA_DEFAULT
+from repro.core.msbfs import MSBFSResult, msbfs_pipelined
+from repro.core.packed import MODES, adaptive_lane_pool
+
+__all__ = ["LaneEngine", "as_engine", "pad_roots"]
+
+
+def pad_roots(roots: np.ndarray, width: int) -> np.ndarray:
+    """Pad a root batch to the fixed sweep ``width`` by repeating the
+    first root — every sweep then reuses ONE compiled engine executable;
+    callers discard the padded lanes' results. Shared by the analytics
+    batch loops (components / closeness / diameter)."""
+    roots = np.asarray(roots, np.int32)
+    if roots.size > width:
+        raise ValueError(
+            f"{roots.size} roots exceed the fixed sweep width {width} — "
+            f"an over-width batch would silently recompile per size")
+    if roots.size == width:
+        return roots
+    return np.concatenate(
+        [roots, np.full(width - roots.size, roots[0], np.int32)])
+
+
+class LaneEngine:
+    """Host- or mesh-backed MS-BFS sweep runner shared by all analytics."""
+
+    def __init__(self, g: CSRGraph, *, ndev: int = 1, mesh=None,
+                 lanes: int | None = None, mode: str = "hybrid",
+                 alpha: float = ALPHA_DEFAULT, beta: float = BETA_DEFAULT,
+                 max_pos: int = 8, probe_impl: str = "xla"):
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        self.g = g
+        self.lanes = lanes
+        self.mode = mode
+        self.alpha = alpha
+        self.beta = beta
+        self.max_pos = max_pos
+        self.probe_impl = probe_impl
+        self.mesh = mesh
+        if mesh is not None:
+            ndev = int(np.prod(mesh.devices.shape))
+        self.ndev = max(int(ndev), 1)
+        # an EXPLICIT mesh always takes the dist path, even at one device
+        # (the caller asked for it; silently swapping in the host engine
+        # would leave the requested code path unexercised)
+        if self.ndev > 1 or mesh is not None:
+            from repro.core.dist_msbfs import host_mesh, partition_graph
+            if self.mesh is None:
+                self.mesh = host_mesh(self.ndev)
+            self.dg = partition_graph(g, self.ndev)
+        else:
+            self.dg = None
+
+    @property
+    def n(self) -> int:
+        return self.g.n
+
+    @property
+    def m(self) -> int:
+        return self.g.m
+
+    def lanes_for(self, num_roots: int) -> int:
+        """Lane-pool width for a sweep of ``num_roots`` — the pinned value
+        or the adaptive sizing rule."""
+        if self.lanes:
+            return self.lanes
+        return adaptive_lane_pool(num_roots, self.n, self.m)
+
+    def sweep(self, roots, derive_parents: bool = False) -> MSBFSResult:
+        """One pipelined engine sweep; ``depth`` is [n, R] with the
+        original vertex count regardless of ndev. By default ``parent``
+        is zero-width: every analytics workload reads depths only, and
+        skipping the parent derivation saves an O(m) scatter-min pass per
+        lane chunk on every sweep — pass ``derive_parents=True`` to get
+        Graph500-grade parents."""
+        roots = np.asarray(roots, np.int32).reshape(-1)
+        if roots.size < 1:
+            raise ValueError("need at least one root")
+        lanes = self.lanes_for(roots.size)
+        if self.dg is not None:
+            from repro.core.dist_msbfs import dist_msbfs
+            return dist_msbfs(self.dg, roots, self.mesh, self.mode,
+                              self.alpha, self.beta, self.max_pos,
+                              self.probe_impl, lanes=lanes,
+                              derive_parents=derive_parents)
+        return msbfs_pipelined(self.g, roots, self.mode, self.alpha,
+                               self.beta, self.max_pos, self.probe_impl,
+                               lanes, derive_parents=derive_parents)
+
+
+def as_engine(g_or_engine, **kwargs) -> LaneEngine:
+    """Accept either a ``CSRGraph`` (build an engine with ``kwargs``) or an
+    already-built ``LaneEngine`` (reuse it — kwargs must then be empty, a
+    half-applied override would silently diverge from the engine's
+    config)."""
+    if isinstance(g_or_engine, LaneEngine):
+        if kwargs:
+            raise ValueError(
+                f"engine already built; unexpected overrides {sorted(kwargs)}")
+        return g_or_engine
+    return LaneEngine(g_or_engine, **kwargs)

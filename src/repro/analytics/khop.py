@@ -1,0 +1,77 @@
+"""K-hop neighbourhoods and reachability from packed frontier words.
+
+A k-hop query is a depth-sliced BFS read-out: run the lane engine from the
+query sources, then slice the per-lane depths at ``depth <= k``. The
+result keeps the engines' OWN bit layout (``packed.depth_slice_words`` —
+uint lane words, bit ``r % LANE_WORD_BITS`` of word ``r // LANE_WORD_BITS``)
+so downstream packed consumers (set intersections across queries, the GNN
+sampler's candidate pools) operate on words, not n-vectors; per-lane
+membership unpacks on demand.
+
+``graph/sampler.py`` exposes this as ``khop_node_sets`` — exact
+neighbourhood candidate pools for GNN sampling riding the same fast path
+as BFS serving.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.analytics.engine import as_engine
+from repro.core.packed import unpack_lanes
+
+__all__ = ["KHopResult", "khop_neighborhood", "reachability"]
+
+
+@dataclass(frozen=True)
+class KHopResult:
+    sources: np.ndarray          # int32[S]
+    k: int
+    words: np.ndarray            # uint[n, W] — packed membership, lane s = source s
+    counts: np.ndarray           # int64[S] — |k-hop neighbourhood| incl. source
+    depth: np.ndarray            # int32[n, S] — full BFS depths (-1 unreached)
+    meta: dict = field(default_factory=dict)
+
+    def members(self, lane: int) -> np.ndarray:
+        """Vertex ids within k hops of ``sources[lane]`` (ascending)."""
+        d = self.depth[:, lane]
+        return np.flatnonzero((d >= 0) & (d <= self.k))
+
+    def member_mask(self) -> np.ndarray:
+        """bool[n, S] unpacked membership (one column per source)."""
+        return np.asarray(unpack_lanes(self.words, self.sources.size))
+
+
+def khop_neighborhood(g_or_engine, sources, k: int,
+                      **engine_kwargs) -> KHopResult:
+    """All vertices within ``k`` hops of each source, one engine sweep.
+
+    Sources share the sweep as bit lanes; the packed ``words`` output is
+    ``MSBFSResult.reached_words(k)`` — the depth-sliced frontier surface
+    the core engines expose.
+    """
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
+    eng = as_engine(g_or_engine, **engine_kwargs)
+    sources = np.asarray(sources, np.int32).reshape(-1)
+    res = eng.sweep(sources)
+    depth = np.asarray(res.depth)
+    words = np.asarray(res.reached_words(k))
+    counts = ((depth >= 0) & (depth <= k)).sum(axis=0).astype(np.int64)
+    return KHopResult(sources=sources, k=int(k), words=words, counts=counts,
+                      depth=depth, meta=dict(ndev=eng.ndev))
+
+
+def reachability(g_or_engine, sources, targets=None,
+                 **engine_kwargs) -> np.ndarray:
+    """Pairwise hop distances ``int64[S, T]`` between source and target
+    batches (-1 unreachable) — one sweep from the sources, gathered at the
+    target rows. ``targets=None`` uses the sources (all-pairs among
+    them)."""
+    eng = as_engine(g_or_engine, **engine_kwargs)
+    sources = np.asarray(sources, np.int32).reshape(-1)
+    targets = sources if targets is None else np.asarray(
+        targets, np.int32).reshape(-1)
+    res = eng.sweep(sources)
+    return np.asarray(res.depth)[targets].T.astype(np.int64)

@@ -83,8 +83,8 @@ def bottomup_simd_step(g: CSRGraph, frontier: jnp.ndarray,
     frontier_words = bitmap.pack(frontier)
     unvisited = ~visited
     if probe_impl == "pallas":
-        from repro.kernels.bottom_up_probe import ops as probe_ops
-        found, parent = probe_ops.bottom_up_probe(
+        from repro.kernels import bottom_up_probe
+        found, parent = bottom_up_probe(
             g.row_ptr, g.col_idx, frontier_words, unvisited, parent, max_pos)
     else:
         found, parent = _probe_xla(g, frontier_words, unvisited, parent, max_pos)

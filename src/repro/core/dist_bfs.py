@@ -169,9 +169,8 @@ def _dist_bfs_impl(row_ptr_s, col_s, srcloc_s, deg_s, root, *, mesh: Mesh,
                 if probe_impl == "pallas":
                     # the paper's probe as the Pallas kernel over the LOCAL
                     # edge slab (VMEM-resident per DESIGN §3.2)
-                    from repro.kernels.bottom_up_probe.kernel import \
-                        bottom_up_probe_pallas
-                    from repro.kernels.common import interpret_default
+                    from repro.kernels import (bottom_up_probe_pallas,
+                                               interpret_default)
                     found_i, parent = bottom_up_probe_pallas(
                         starts, deg, unv, parent, col, fw_global,
                         max_pos=max_pos, interpret=interpret_default())

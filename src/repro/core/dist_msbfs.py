@@ -405,20 +405,22 @@ def _derive_parents_dist(row_ptr_s, col_s, srcloc_s, depth_full, roots, *,
 
 
 def dist_msbfs_engine_result(dg: DistGraph, state: DistPipelineState,
-                             mesh: Mesh, trim: bool = True) -> MSBFSResult:
+                             mesh: Mesh, trim: bool = True,
+                             derive_parents: bool = True) -> MSBFSResult:
     """Assemble an ``MSBFSResult`` over the answered queue slots.
 
     Depths come from the flushed per-device row blocks; parents are
     derived distributed (min-id neighbour one level up, the MSBFSResult
     convention: -1 for unreached/dead vertices, ``parent[root_r, r] ==
-    root_r``). With ``trim`` the arrays are cut back to the original
-    (pre-padding) vertex count."""
+    root_r``) unless ``derive_parents=False`` (zero-width ``parent``, the
+    analytics depth-only contract). With ``trim`` the arrays are cut back
+    to the original (pre-padding) vertex count."""
     ndev = _check_partition(dg, mesh)
     r = int(state.queued)
     cap = state.capacity
     depth = jnp.reshape(state.out_depth, (dg.n, cap + 1))[:, :r]
     roots = state.queue[:r]
-    if r:
+    if r and derive_parents:
         parent = _derive_parents_dist(
             dg.row_ptr, dg.col_idx, dg.src_loc, depth,
             roots.astype(jnp.int32), mesh=mesh, n=dg.n,
@@ -449,7 +451,8 @@ def host_mesh(ndev: int) -> Mesh:
 def dist_msbfs(dg: DistGraph, roots, mesh: Mesh, mode: str = "hybrid",
                alpha: float = ALPHA_DEFAULT, beta: float = BETA_DEFAULT,
                max_pos: int = 8, probe_impl: str = "xla",
-               lanes: int | None = None) -> MSBFSResult:
+               lanes: int | None = None,
+               derive_parents: bool = True) -> MSBFSResult:
     """Answer an arbitrary number of roots with ONE sharded engine sweep.
 
     ``lanes=None`` (or 0) sizes the bit-lane pool adaptively from the pending
@@ -473,4 +476,5 @@ def dist_msbfs(dg: DistGraph, roots, mesh: Mesh, mode: str = "hybrid",
     state = dist_msbfs_engine_enqueue(state, roots)
     state = dist_msbfs_engine_drain(dg, state, mesh, mode, alpha, beta,
                                     max_pos, probe_impl)
-    return dist_msbfs_engine_result(dg, state, mesh)
+    return dist_msbfs_engine_result(dg, state, mesh,
+                                    derive_parents=derive_parents)

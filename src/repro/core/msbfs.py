@@ -64,17 +64,18 @@ import jax.numpy as jnp
 from repro.core.csr import CSRGraph
 from repro.core.hybrid import ALPHA_DEFAULT, BETA_DEFAULT, MAX_TRACE
 from repro.core.packed import (LANE_WORD_BITS, MODES, adaptive_lane_pool,
-                               dispatch_packed_step, lane_counters,
-                               num_lane_words, pack_lanes,
+                               depth_slice_words, dispatch_packed_step,
+                               lane_counters, num_lane_words, pack_lanes,
                                queue_claims, segment_or,
                                select_direction, unpack_lanes)
 
 __all__ = [
     "LANE_WORD_BITS", "MAX_LANES", "MODES", "MSBFSResult",
-    "adaptive_lane_pool", "msbfs", "msbfs_engine_drain",
-    "msbfs_engine_enqueue", "msbfs_engine_idle", "msbfs_engine_init",
-    "msbfs_engine_result", "msbfs_engine_step", "msbfs_pipelined",
-    "num_lane_words", "pack_lanes", "segment_or", "unpack_lanes",
+    "adaptive_lane_pool", "depth_slice_words", "msbfs",
+    "msbfs_engine_drain", "msbfs_engine_enqueue", "msbfs_engine_idle",
+    "msbfs_engine_init", "msbfs_engine_result", "msbfs_engine_step",
+    "msbfs_pipelined", "num_lane_words", "pack_lanes", "segment_or",
+    "unpack_lanes",
 ]
 
 MAX_LANES = 64          # two uint32 words of roots per batch
@@ -89,6 +90,17 @@ class MSBFSResult(NamedTuple):
     trace_vf: jnp.ndarray        # int32[MAX_TRACE, R]
     trace_ef: jnp.ndarray        # int32[MAX_TRACE, R]
     trace_eu: jnp.ndarray        # int32[MAX_TRACE, R]
+
+    def reached_words(self, max_depth=None, min_depth=0) -> jnp.ndarray:
+        """Packed lane words over the depth band [min_depth, max_depth] —
+        the engines' own bit layout, recovered from the result. With the
+        defaults this is each lane's full reached set; ``max_depth=k``
+        slices the k-hop neighbourhood (``repro.analytics.khop`` rides
+        this), ``min_depth=max_depth=d`` reconstructs the layer-d
+        frontier."""
+        if max_depth is None:
+            max_depth = jnp.iinfo(jnp.int32).max
+        return depth_slice_words(self.depth, max_depth, min_depth)
 
 
 class _State(NamedTuple):
@@ -458,16 +470,21 @@ def msbfs_engine_drain(g: CSRGraph, state: PipelineState,
     return _drain(g, state, mode, alpha, beta, max_pos, probe_impl)
 
 
-def msbfs_engine_result(g: CSRGraph, state: PipelineState) -> MSBFSResult:
+def msbfs_engine_result(g: CSRGraph, state: PipelineState,
+                        derive_parents: bool = True) -> MSBFSResult:
     """Assemble an ``MSBFSResult`` over the answered queue slots.
 
     Columns of unanswered slots (``out_layers == 0``) hold init values
-    (-1 depths); callers normally drain first.
+    (-1 depths); callers normally drain first. ``derive_parents=False``
+    skips the O(m)-per-lane-chunk parent scatter and returns a
+    zero-width ``parent`` — the depth-only contract the analytics
+    workloads consume.
     """
     r = int(state.queued)
     depth = state.out_depth[:, :r]
     roots = state.queue[:r]
-    parent = _derive_parents(g, depth, roots)
+    parent = (_derive_parents(g, depth, roots) if derive_parents
+              else jnp.zeros((g.n, 0), jnp.int32))
     return MSBFSResult(
         parent=parent, depth=depth, num_layers=state.out_layers[:r],
         edges_traversed=state.out_edges[:r],
@@ -478,7 +495,8 @@ def msbfs_engine_result(g: CSRGraph, state: PipelineState) -> MSBFSResult:
 def msbfs_pipelined(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",
                     alpha: float = ALPHA_DEFAULT, beta: float = BETA_DEFAULT,
                     max_pos: int = 8, probe_impl: str = "xla",
-                    lanes: int = MAX_LANES) -> MSBFSResult:
+                    lanes: int = MAX_LANES,
+                    derive_parents: bool = True) -> MSBFSResult:
     """Answer an arbitrary number of roots in ONE pipelined engine sweep.
 
     Splits R > ``lanes`` roots across bit-lane word-batches WITHOUT batch
@@ -500,4 +518,4 @@ def msbfs_pipelined(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",
     state = msbfs_engine_enqueue(state, roots)
     state = msbfs_engine_drain(g, state, mode, alpha, beta, max_pos,
                                probe_impl)
-    return msbfs_engine_result(g, state)
+    return msbfs_engine_result(g, state, derive_parents=derive_parents)

@@ -41,29 +41,62 @@ LANE_WORD_BITS = 32
 MODES = ("hybrid", "topdown", "bottomup")
 
 
+def word_dtype():
+    """Lane-word dtype for the current ``LANE_WORD_BITS``. The ROADMAP
+    uint64 rung flips the constant to 64; everything downstream derives
+    the dtype from here. 64-bit words hard-require jax x64: without it
+    jnp silently materializes uint64 as uint32 and lanes 32-63 of every
+    word would vanish without an error — fail loudly instead."""
+    if LANE_WORD_BITS == 64:
+        if not jax.config.jax_enable_x64:
+            raise RuntimeError(
+                "LANE_WORD_BITS=64 requires jax x64 (enable "
+                "jax_enable_x64); without it uint64 lane words silently "
+                "downcast to uint32 and half the lanes are lost")
+        return jnp.uint64
+    return jnp.uint32
+
+
 def num_lane_words(num_roots: int) -> int:
     return (num_roots + LANE_WORD_BITS - 1) // LANE_WORD_BITS
 
 
 def pack_lanes(mask: jnp.ndarray) -> jnp.ndarray:
-    """Pack bool[..., R] lane masks into uint32[..., W] words (LSB-first)."""
+    """Pack bool[..., R] lane masks into uint[..., W] words (LSB-first)."""
     r = mask.shape[-1]
     w = num_lane_words(r)
+    dt = word_dtype()
     pad = w * LANE_WORD_BITS - r
     if pad:
         mask = jnp.concatenate(
             [mask, jnp.zeros(mask.shape[:-1] + (pad,), mask.dtype)], axis=-1)
     lanes = mask.reshape(mask.shape[:-1] + (w, LANE_WORD_BITS))
-    weights = jnp.uint32(1) << jnp.arange(LANE_WORD_BITS, dtype=jnp.uint32)
-    return (lanes.astype(jnp.uint32) * weights).sum(axis=-1, dtype=jnp.uint32)
+    weights = jnp.asarray(1, dt) << jnp.arange(LANE_WORD_BITS, dtype=dt)
+    return (lanes.astype(dt) * weights).sum(axis=-1, dtype=dt)
 
 
 def unpack_lanes(words: jnp.ndarray, num_roots: int) -> jnp.ndarray:
-    """Unpack uint32[..., W] lane words into bool[..., R]."""
-    shifts = jnp.arange(LANE_WORD_BITS, dtype=jnp.uint32)
-    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    """Unpack uint[..., W] lane words into bool[..., R]."""
+    dt = words.dtype
+    shifts = jnp.arange(LANE_WORD_BITS, dtype=dt)
+    bits = (words[..., None] >> shifts) & jnp.asarray(1, dt)
     flat = bits.reshape(words.shape[:-1] + (-1,))
     return flat[..., :num_roots].astype(jnp.bool_)
+
+
+def depth_slice_words(depth: jnp.ndarray, max_depth,
+                      min_depth=0) -> jnp.ndarray:
+    """Re-pack per-lane depths into frontier-style lane words, sliced to
+    the band ``min_depth <= depth <= max_depth``.
+
+    ``depth`` is the engines' int32[n, R] output (-1 unreached); the result
+    is uint[n, W] in the SAME bit layout the engines traverse with —
+    bit ``r % LANE_WORD_BITS`` of word ``r // LANE_WORD_BITS``. This is the
+    k-hop / reachability read-out surface: ``max_depth=k`` yields the
+    packed k-hop neighbourhood of every lane root at once, and
+    ``min_depth=max_depth=d`` reconstructs the layer-``d`` frontier.
+    """
+    return pack_lanes((depth >= min_depth) & (depth <= max_depth))
 
 
 def segment_or(vals: jnp.ndarray, row_ptr: jnp.ndarray) -> jnp.ndarray:
@@ -88,7 +121,8 @@ def segment_or(vals: jnp.ndarray, row_ptr: jnp.ndarray) -> jnp.ndarray:
     scanned, _ = jax.lax.associative_scan(comb, (vals, flags))
     deg = row_ptr[1:] - row_ptr[:-1]
     last = jnp.clip(row_ptr[1:] - 1, 0, m - 1)
-    return jnp.where((deg > 0)[:, None], scanned[last], jnp.uint32(0))
+    return jnp.where((deg > 0)[:, None], scanned[last],
+                     jnp.zeros((), vals.dtype))
 
 
 def probe_xla(g: CSRGraph, frontier: jnp.ndarray, need: jnp.ndarray,
@@ -108,7 +142,8 @@ def probe_xla(g: CSRGraph, frontier: jnp.ndarray, need: jnp.ndarray,
     for pos in range(max_pos):
         live = ((need & ~acc) != 0).any(axis=-1) & (pos < deg)
         vadj = g.col_idx[jnp.clip(starts + pos, 0, m - 1)]
-        acc = acc | jnp.where(live[:, None], frontier[vadj], jnp.uint32(0))
+        acc = acc | jnp.where(live[:, None], frontier[vadj],
+                              jnp.zeros((), frontier.dtype))
     return acc
 
 
@@ -119,9 +154,9 @@ def bottomup_packed_step(g: CSRGraph, frontier: jnp.ndarray,
     Returns new frontier bits for bottom-up lanes (already & ~visited)."""
     need = (~visited) & bu_sel
     if probe_impl == "pallas":
-        from repro.kernels.msbfs_probe import ops as probe_ops
-        acc = probe_ops.msbfs_probe(g.row_ptr, g.col_idx, frontier, need,
-                                    max_pos=max_pos)
+        from repro.kernels import msbfs_probe
+        acc = msbfs_probe(g.row_ptr, g.col_idx, frontier, need,
+                          max_pos=max_pos)
     else:
         acc = probe_xla(g, frontier, need, max_pos)
     found = acc & need
@@ -134,7 +169,8 @@ def bottomup_packed_step(g: CSRGraph, frontier: jnp.ndarray,
         # src row is already full, so they never contribute
         act = (residue[g.src_idx] & (pos_e >= max_pos)
                & (pos_e < g.deg[g.src_idx]))
-        contrib = jnp.where(act[:, None], frontier[g.col_idx], jnp.uint32(0))
+        contrib = jnp.where(act[:, None], frontier[g.col_idx],
+                            jnp.zeros((), frontier.dtype))
         return found | (segment_or(contrib, g.row_ptr) & need)
 
     return jax.lax.cond(jnp.any(residue), run_fallback, lambda f: f, found)

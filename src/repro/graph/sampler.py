@@ -79,6 +79,29 @@ def sampled_graph_batch(key, g: CSRGraph, seeds, feats, labels,
         graph_ids=jnp.zeros_like(nodes), n_graphs=1)
 
 
+def khop_node_sets(g: CSRGraph, seeds, k: int, **engine_kwargs):
+    """Exact k-hop candidate pools for neighbour sampling — the fast path
+    through the packed MS-BFS engine (``repro.analytics.khop``).
+
+    Where ``sample_subgraph`` draws a *bounded random* neighbourhood
+    (fanout caps, with replacement), this returns each seed's *complete*
+    depth<=k neighbourhood: all seeds share ONE lane sweep, and the
+    candidate sets are the packed frontier words sliced at depth <= k.
+    Use it to build unbiased candidate pools (then subsample host-side) or
+    to measure fanout-sampling coverage against the exact neighbourhood.
+
+    Returns ``(node_sets, khop_result)`` — ``node_sets[i]`` is the
+    ascending int64 vertex-id array within ``k`` hops of ``seeds[i]``
+    (seed included); ``khop_result`` keeps the packed words / counts /
+    depths for packed consumers. ``engine_kwargs`` pass through to the
+    analytics ``LaneEngine`` (``ndev=``, ``lanes=``, ...).
+    """
+    from repro.analytics.khop import khop_neighborhood
+    res = khop_neighborhood(g, seeds, k, **engine_kwargs)
+    sets = [res.members(i) for i in range(res.sources.size)]
+    return sets, res
+
+
 def dedup_count(nodes, n_total: int) -> jnp.ndarray:
     """Unique-vertex count via the core bitmap (instrumentation: measures
     sampling redundancy the way the BFS visited bitmap would)."""

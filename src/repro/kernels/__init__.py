@@ -1,3 +1,42 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Public kernel entry points.
+
+Callers import from here (``from repro.kernels import msbfs_probe``)
+instead of deep module paths — the op-level wrappers, their Pallas
+kernels, and the pure-jnp references are all re-exported. Two op names
+(``bottom_up_probe``, ``msbfs_probe``) intentionally shadow their
+subpackages: the function bindings below land after the import system
+binds the submodules, and deep *from*-imports
+(``from repro.kernels.msbfs_probe.ops import msbfs_probe``) resolve
+through ``sys.modules``, so they keep working. What the shadowing DOES
+break: attribute traversal (``repro.kernels.msbfs_probe.ops``) and the
+aliased deep-import form (``import repro.kernels.msbfs_probe.ops as m``),
+both of which walk package attributes — use from-imports, as all in-repo
+callers now do.
+
+Importing this package pulls the Pallas machinery; the core engines keep
+their pay-only-when-``probe_impl="pallas"`` discipline by importing it
+inside the pallas branches only.
+"""
+from repro.kernels.bottom_up_probe.kernel import bottom_up_probe_pallas
+from repro.kernels.bottom_up_probe.ops import bottom_up_probe
+from repro.kernels.bottom_up_probe.ref import bottom_up_probe_ref
+from repro.kernels.common import interpret_default
+from repro.kernels.ell_spmm.kernel import ell_spmm_pallas
+from repro.kernels.ell_spmm.ops import spmm_aggregate
+from repro.kernels.ell_spmm.ref import ell_spmm_ref
+from repro.kernels.msbfs_probe.kernel import msbfs_probe_pallas
+from repro.kernels.msbfs_probe.ops import msbfs_probe
+from repro.kernels.msbfs_probe.ref import msbfs_probe_ref
+from repro.kernels.topdown_scan.kernel import topdown_scan_pallas
+from repro.kernels.topdown_scan.ops import topdown_step_pallas
+from repro.kernels.topdown_scan.ref import topdown_scan_ref
+
+__all__ = [
+    "bottom_up_probe", "bottom_up_probe_pallas", "bottom_up_probe_ref",
+    "ell_spmm_pallas", "ell_spmm_ref", "interpret_default", "msbfs_probe",
+    "msbfs_probe_pallas", "msbfs_probe_ref", "spmm_aggregate",
+    "topdown_scan_pallas", "topdown_scan_ref", "topdown_step_pallas",
+]

@@ -1,28 +1,40 @@
-"""Streaming BFS serving loop — roots enqueue into idle lanes MID-SWEEP.
+"""Streaming analytics serving loop — mixed query types, ONE engine sweep.
 
-The serving scenario from ROADMAP: queries (BFS roots) arrive over time,
-and the pipelined MS-BFS engine (``repro.core.msbfs``) never drains
-between them — an arriving root waits in the pending queue only until any
-lane finishes its current traversal, then takes over that lane's bit slot
-while the other lanes keep traversing. Latency is measured in engine
-*layers* (the deterministic unit of work), so runs are reproducible.
+PR 2's serving scenario grown into a multi-workload analytics server: the
+pipelined MS-BFS engine (``repro.core.msbfs``; ``--ndev N`` swaps in the
+sharded ``repro.core.dist_msbfs``) never drains between requests, and the
+requests themselves are no longer only BFS roots. Every analytics query
+type that reduces to lane traversals rides the same bit-lane pool:
+
+* ``bfs``       — one root, full traversal (parents/depths);
+* ``khop``      — one root, answer = the depth <= k band of its lane
+                  (read from the dense depth column here; the offline
+                  ``analytics.khop`` query exposes the same band as
+                  packed ``MSBFSResult.reached_words``);
+* ``reach``     — one root + target vertex, answer = hop distance;
+* ``closeness`` — a sampled-source centrality estimate: S roots enqueued
+                  as one request, answered when ALL S lanes flush, the
+                  estimator is ``analytics.closeness.closeness_from_depths``.
+
+Each enqueued request is tagged with its query type; the loop reports
+per-type sojourn (arrival layer -> answer layer) and latency statistics on
+top of the aggregate TEPS / occupancy numbers, so a mixed workload shows
+which query class is starving.
 
   PYTHONPATH=src python -m repro.launch.serve_bfs --scale 12 --lanes 32 \
-      --queries 96 --burst 8 --every 2 [--validate] [--ndev 4]
+      --queries 64 --mix bfs:4,khop:2,reach:1,closeness:1 \
+      --burst 4 --every 2 [--validate] [--ndev 4]
 
-``--lanes 0`` sizes the bit-lane pool adaptively from the query count and
-the graph's degree stats; ``--ndev N`` serves the SAME loop on the sharded
-engine (``repro.core.dist_msbfs``) over N devices (force host devices with
-XLA_FLAGS=--xla_force_host_platform_device_count=N before launch).
-
-Reports per-query sojourn layers (arrival -> answer), lane occupancy, and
-aggregate TEPS of the whole serving window.
+``--lanes 0`` sizes the bit-lane pool adaptively; latency is measured in
+engine *layers* (the deterministic unit of work), so runs are
+reproducible.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+from dataclasses import dataclass, field
 
 import jax
 import numpy as np
@@ -33,6 +45,78 @@ from repro.core.msbfs import (adaptive_lane_pool, msbfs_engine_enqueue,
                               msbfs_engine_result, msbfs_engine_step)
 from repro.graph.generator import rmat_graph, sample_roots
 from repro.graph.validate import validate_bfs_tree
+
+QUERY_KINDS = ("bfs", "khop", "reach", "closeness")
+
+
+@dataclass
+class Request:
+    """One tagged serving request = 1+ BFS lanes through the shared engine."""
+    qtype: str                   # one of QUERY_KINDS
+    roots: np.ndarray            # int32[s] lanes this request enqueues
+    k: int = 0                   # khop radius
+    target: int = -1             # reach target vertex
+    slots: slice | None = None   # engine queue slots, set at enqueue time
+    answer: dict = field(default_factory=dict)
+
+
+def bfs_requests(roots) -> list[Request]:
+    """Plain BFS workload (the PR-2 serving loop): one request per root."""
+    return [Request("bfs", np.asarray([r], np.int32)) for r in roots]
+
+
+def _parse_mix(spec: str) -> dict[str, float]:
+    """'bfs:4,khop:2' -> normalized weights; bare names weigh 1."""
+    weights = {}
+    for part in spec.split(","):
+        name, _, w = part.strip().partition(":")
+        if name not in QUERY_KINDS:
+            raise ValueError(f"unknown query type {name!r} in mix {spec!r} "
+                             f"— expected {QUERY_KINDS}")
+        weights[name] = float(w) if w else 1.0
+        if weights[name] < 0:
+            raise ValueError(
+                f"negative weight for {name!r} in mix {spec!r}")
+    total = sum(weights.values())
+    if total <= 0:
+        raise ValueError(f"mix {spec!r} has no positive weight")
+    return {k: v / total for k, v in weights.items()}
+
+
+def make_requests(g, num: int, mix: str = "bfs", seed: int = 0,
+                  khop_k: int = 2, closeness_sources: int = 8,
+                  ) -> list[Request]:
+    """Draw ``num`` requests from the workload mix. Roots follow the
+    Graph500 sampling rule (degree > 0); reach targets are arbitrary
+    vertices (unreachable answers are part of the workload)."""
+    weights = _parse_mix(mix)
+    rng = np.random.default_rng(seed)
+    kinds = rng.choice(list(weights), size=num, p=list(weights.values()))
+    # a degree>0 pool for traversal roots; requests may reuse roots (they
+    # are independent traversals). Closeness sources are NOT drawn from
+    # the pool: the closeness_from_depths n/k scaling assumes sources
+    # uniform over ALL n vertices (zero-degree ones included), exactly
+    # like the offline estimator — a deg>0 pool would inflate the
+    # estimates by ~n/pool.size.
+    pool = sample_roots(g, g.n, seed=seed + 1)
+    closeness_sources = min(max(1, closeness_sources), g.n)
+    out = []
+    for kind in kinds:
+        if kind == "closeness":
+            s = np.sort(rng.choice(g.n, size=closeness_sources,
+                                   replace=False)).astype(np.int32)
+            out.append(Request("closeness", s))
+        elif kind == "reach":
+            out.append(Request(
+                "reach", np.asarray([rng.choice(pool)], np.int32),
+                target=int(rng.integers(g.n))))
+        elif kind == "khop":
+            out.append(Request(
+                "khop", np.asarray([rng.choice(pool)], np.int32), k=khop_k))
+        else:
+            out.append(Request(
+                "bfs", np.asarray([rng.choice(pool)], np.int32)))
+    return out
 
 
 def _engine(g, mode: str, probe_impl: str, ndev: int):
@@ -47,7 +131,8 @@ def _engine(g, mode: str, probe_impl: str, ndev: int):
             lambda s: msbfs_engine_step(g, s, mode, ALPHA_DEFAULT,
                                         BETA_DEFAULT, 8, probe_impl),
             msbfs_engine_idle,
-            lambda s: msbfs_engine_result(g, s),
+            lambda s, parents=True: msbfs_engine_result(
+                g, s, derive_parents=parents),
         )
     from repro.core import dist_msbfs as dm
     mesh = dm.host_mesh(ndev)
@@ -59,76 +144,144 @@ def _engine(g, mode: str, probe_impl: str, ndev: int):
                                             ALPHA_DEFAULT, BETA_DEFAULT, 8,
                                             probe_impl),
         dm.dist_msbfs_engine_idle,
-        lambda s: dm.dist_msbfs_engine_result(dg, s, mesh),
+        lambda s, parents=True: dm.dist_msbfs_engine_result(
+            dg, s, mesh, derive_parents=parents),
     )
 
 
-def serve(g, roots: np.ndarray, lanes: int, burst: int, every: int,
+def _sojourn_stats(sojourn: np.ndarray) -> dict:
+    return dict(
+        mean=float(sojourn.mean()), p50=float(np.percentile(sojourn, 50)),
+        p95=float(np.percentile(sojourn, 95)), max=int(sojourn.max()))
+
+
+def _answers(g, requests: list[Request], depth: np.ndarray) -> dict:
+    """Post-process each request's lanes into its typed answer; returns a
+    small per-type summary for the stats dict."""
+    from repro.analytics.closeness import closeness_from_depths
+    n = g.n
+    summary: dict[str, dict] = {}
+    for req in requests:
+        d = depth[:, req.slots]
+        if req.qtype == "bfs":
+            req.answer = dict(reached=int((d[:, 0] >= 0).sum()),
+                              layers=int(d[:, 0].max()) + 1)
+        elif req.qtype == "khop":
+            band = (d[:, 0] >= 0) & (d[:, 0] <= req.k)
+            req.answer = dict(k=req.k, size=int(band.sum()))
+        elif req.qtype == "reach":
+            hops = int(d[req.target, 0])
+            req.answer = dict(target=req.target, hops=hops,
+                              reachable=hops >= 0)
+        elif req.qtype == "closeness":
+            c = closeness_from_depths(d, n)
+            v = int(np.argmax(c))
+            req.answer = dict(sources=int(req.roots.size), top_vertex=v,
+                              top_closeness=float(c[v]))
+    summary["bfs"] = dict(mean_reached=float(np.mean(
+        [r.answer["reached"] for r in requests if r.qtype == "bfs"] or [0])))
+    summary["khop"] = dict(mean_size=float(np.mean(
+        [r.answer["size"] for r in requests if r.qtype == "khop"] or [0])))
+    reach = [r for r in requests if r.qtype == "reach"]
+    summary["reach"] = dict(reachable_frac=float(np.mean(
+        [r.answer["reachable"] for r in reach])) if reach else 0.0)
+    clo = [r for r in requests if r.qtype == "closeness"]
+    summary["closeness"] = dict(top_vertices=sorted(
+        {r.answer["top_vertex"] for r in clo}))
+    return {k: v for k, v in summary.items()
+            if any(r.qtype == k for r in requests)}
+
+
+def serve(g, requests: list[Request], lanes: int, burst: int, every: int,
           mode: str = "hybrid", probe_impl: str = "xla",
           validate: bool = False, ndev: int = 1) -> dict:
-    """Feed ``roots`` to the engine ``burst`` at a time every ``every``
-    layers; run until all are answered. Returns serving statistics.
-    ``lanes=0`` picks the pool width adaptively; ``ndev>1`` runs the
-    sharded engine."""
-    num_q = len(roots)
-    if num_q < 1:
-        raise ValueError("need at least one query")
+    """Feed tagged ``requests`` to the engine ``burst`` requests at a time
+    every ``every`` layers; run until all are answered. Returns serving
+    statistics with per-query-type sojourn breakdowns. ``lanes=0`` picks
+    the pool width adaptively; ``ndev>1`` runs the sharded engine."""
+    num_req = len(requests)
+    if num_req < 1:
+        raise ValueError("need at least one request")
     if burst < 1 or every < 1:
         raise ValueError(f"burst and every must be >= 1, "
                          f"got burst={burst} every={every}")
+    capacity = int(sum(r.roots.size for r in requests))
     if not lanes:
-        lanes = adaptive_lane_pool(num_q, g.n, g.m)
+        lanes = adaptive_lane_pool(capacity, g.n, g.m)
     eng_init, eng_enqueue, eng_step, eng_idle, eng_result = _engine(
         g, mode, probe_impl, ndev)
-    state = eng_init(num_q, lanes)
+    state = eng_init(capacity, lanes)
 
-    arrival = np.full(num_q, -1, np.int64)   # layer each query arrived
-    answered = np.full(num_q, -1, np.int64)  # layer each query was answered
+    arrival = np.full(num_req, -1, np.int64)   # layer the request arrived
+    answered = np.full(num_req, -1, np.int64)  # layer it was fully answered
     occupancy = []
 
+    slot_hi = 0
+
     def enqueue(s, lo, hi, layer):
+        nonlocal slot_hi
+        for req in requests[lo:hi]:
+            req.slots = slice(slot_hi, slot_hi + req.roots.size)
+            slot_hi += req.roots.size
+            s = eng_enqueue(s, req.roots)
         arrival[lo:hi] = layer
-        return eng_enqueue(s, roots[lo:hi])
+        return s
 
     # warm the step executable on a throwaway state so the serving window
     # measures traversal, not one-time XLA compilation (same discipline as
     # the graph500 harness's warmup)
     jax.block_until_ready(
-        eng_step(eng_enqueue(state, roots[:1])).out_depth)
+        eng_step(eng_enqueue(state, requests[0].roots[:1])).out_depth)
 
-    state = enqueue(state, 0, min(burst, num_q), 0)
-    fed = min(burst, num_q)
+    state = enqueue(state, 0, min(burst, num_req), 0)
+    fed = min(burst, num_req)
     layer = 0
     t0 = time.perf_counter()
-    while fed < num_q or not eng_idle(state):
+    while fed < num_req or not eng_idle(state):
         state = eng_step(state)
         layer += 1
-        occupancy.append(int(np.sum(np.asarray(state.lane_qidx) < num_q)))
-        done = np.asarray(state.out_layers[:num_q]) > 0
-        answered[done & (answered < 0)] = layer
-        if layer % every == 0 and fed < num_q:
-            nxt = min(fed + burst, num_q)
+        occupancy.append(
+            int(np.sum(np.asarray(state.lane_qidx) < capacity)))
+        done_slots = np.asarray(state.out_layers[:capacity]) > 0
+        for i, req in enumerate(requests[:fed]):
+            if answered[i] < 0 and done_slots[req.slots].all():
+                answered[i] = layer   # a request answers when EVERY lane has
+        if layer % every == 0 and fed < num_req:
+            nxt = min(fed + burst, num_req)
             state = enqueue(state, fed, nxt, layer)
             fed = nxt
     jax.block_until_ready(state.out_depth)
     wall = time.perf_counter() - t0
 
-    out = eng_result(state)
+    # parents cost an O(m) scatter-min pass per lane chunk and only the
+    # validator reads them — the answers post-processing is depth-only
+    out = eng_result(state, validate)
+    depth = np.asarray(out.depth)
     if validate:
         from repro.core.csr import to_numpy_adj
         rp, ci = to_numpy_adj(g)
         parent = np.asarray(out.parent)
-        for i, r in enumerate(roots):
-            validate_bfs_tree(rp, ci, parent[:, i], int(r))
+        col = 0
+        for req in requests:
+            for r in req.roots:   # every lane is a BFS tree, whatever the tag
+                validate_bfs_tree(rp, ci, parent[:, col], int(r))
+                col += 1
 
     sojourn = answered - arrival
+    qtypes = np.asarray([r.qtype for r in requests])
+    per_type = {
+        kind: dict(count=int((qtypes == kind).sum()),
+                   lanes=int(sum(r.roots.size for r in requests
+                                 if r.qtype == kind)),
+                   sojourn_layers=_sojourn_stats(sojourn[qtypes == kind]))
+        for kind in QUERY_KINDS if (qtypes == kind).any()}
     edges = int(np.asarray(out.edges_traversed).sum()) // 2
     return dict(
-        queries=num_q, lanes=lanes, ndev=ndev, layers=layer,
-        wall_s=round(wall, 4),
-        sojourn_layers=dict(
-            mean=float(sojourn.mean()), p50=float(np.percentile(sojourn, 50)),
-            p95=float(np.percentile(sojourn, 95)), max=int(sojourn.max())),
+        requests=num_req, total_lanes=capacity, lanes=lanes, ndev=ndev,
+        layers=layer, wall_s=round(wall, 4),
+        sojourn_layers=_sojourn_stats(sojourn),
+        per_type=per_type,
+        answers=_answers(g, requests, depth),
         mean_lane_occupancy=float(np.mean(occupancy)),
         aggregate_mteps=round(edges / wall / 1e6, 2) if wall > 0 else 0.0,
         validated=bool(validate),
@@ -144,9 +297,17 @@ def main():
                          "depth + degree stats")
     ap.add_argument("--ndev", type=int, default=1,
                     help="shard the engine over this many devices")
-    ap.add_argument("--queries", type=int, default=96)
+    ap.add_argument("--queries", type=int, default=64,
+                    help="number of requests (a closeness request costs "
+                         "--closeness-sources lanes)")
+    ap.add_argument("--mix", default="bfs",
+                    help="workload mix, e.g. bfs:4,khop:2,reach:1,"
+                         "closeness:1 (weights optional)")
+    ap.add_argument("--khop-k", type=int, default=2)
+    ap.add_argument("--closeness-sources", type=int, default=8,
+                    help="sampled sources (lanes) per closeness request")
     ap.add_argument("--burst", type=int, default=8,
-                    help="queries arriving per burst")
+                    help="requests arriving per burst")
     ap.add_argument("--every", type=int, default=2,
                     help="layers between arrival bursts")
     ap.add_argument("--mode", default="hybrid",
@@ -157,8 +318,10 @@ def main():
     args = ap.parse_args()
 
     g = rmat_graph(args.scale, args.edgefactor, args.seed)
-    roots = sample_roots(g, args.queries, seed=args.seed + 1)
-    stats = serve(g, roots, args.lanes, args.burst, args.every,
+    requests = make_requests(g, args.queries, mix=args.mix, seed=args.seed,
+                             khop_k=args.khop_k,
+                             closeness_sources=args.closeness_sources)
+    stats = serve(g, requests, args.lanes, args.burst, args.every,
                   mode=args.mode, probe_impl=args.probe_impl,
                   validate=args.validate, ndev=args.ndev)
     print(json.dumps(stats, indent=2))

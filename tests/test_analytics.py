@@ -1,0 +1,319 @@
+"""Analytics subsystem vs pure-NumPy references.
+
+Every workload (components, closeness exact + sampled, k-hop,
+reachability, diameter bounds) is cross-checked against a reference built
+on ``repro.core.ref.bfs_reference`` over the property-suite graph zoo
+(disconnected components, star, path, self-loops, duplicate edges,
+isolated vertices). The typed query API dispatch, the serve_bfs
+multi-workload loop, and an ndev=2 parity leg (forced multi-device mesh,
+conftest subprocess pattern) ride the same cases.
+"""
+import numpy as np
+import pytest
+from conftest import run_in_subprocess
+
+from repro.analytics import (ClosenessQuery, ComponentsQuery, DiameterQuery,
+                             KHopQuery, LaneEngine, closeness_centrality,
+                             connected_components, diameter_bounds,
+                             khop_neighborhood, reachability, run_query)
+from repro.analytics.closeness import closeness_from_depths
+from repro.core.csr import from_edges, to_numpy_adj
+from repro.core.ref import bfs_reference
+from repro.graph.generator import rmat_graph
+
+
+def path_graph(n):
+    return from_edges(np.arange(n - 1), np.arange(1, n), n)
+
+
+def star_graph(n):
+    return from_edges(np.zeros(n - 1, np.int64), np.arange(1, n), n)
+
+
+def zoo_graph():
+    """Two components + isolated vertices + self-loop + duplicate edge."""
+    src = np.concatenate([np.arange(5), np.full(5, 10), [3, 3, 12]])
+    dst = np.concatenate([np.arange(1, 6), np.arange(11, 16), [3, 4, 13]])
+    return from_edges(src, dst, 20)
+
+
+def rmat_small():
+    return rmat_graph(8, 4, seed=3)     # sparse -> several components
+
+
+GRAPHS = [("path", path_graph(12)), ("star", star_graph(9)),
+          ("zoo", zoo_graph()), ("rmat", rmat_small())]
+
+
+def ref_depths_all(g):
+    """int64[n, n] all-pairs hop distances via the serial reference."""
+    rp, ci = to_numpy_adj(g)
+    n = g.n
+    d = np.empty((n, n), np.int64)
+    for s in range(n):
+        d[:, s] = bfs_reference(rp, ci, s)[1]
+    return d
+
+
+def ref_components(g):
+    """Canonical min-vertex component labels via serial BFS."""
+    rp, ci = to_numpy_adj(g)
+    labels = np.full(g.n, -1, np.int64)
+    for v in range(g.n):
+        if labels[v] < 0:
+            reached = bfs_reference(rp, ci, v)[1] >= 0
+            labels[reached] = v
+    return labels
+
+
+def ref_closeness(g):
+    """Wasserman–Faust closeness from all-pairs reference distances."""
+    d = ref_depths_all(g)
+    n = g.n
+    reached = d >= 0
+    r = reached.sum(axis=1)
+    sum_d = np.where(reached, d, 0).sum(axis=1)
+    out = np.zeros(n, np.float64)
+    ok = (r > 1) & (sum_d > 0)
+    out[ok] = (r[ok] - 1.0) ** 2 / (sum_d[ok] * (n - 1))
+    return out
+
+
+@pytest.mark.parametrize("name,g", GRAPHS, ids=[n for n, _ in GRAPHS])
+@pytest.mark.parametrize("batch", [4, 64])
+def test_components_match_reference(name, g, batch):
+    res = connected_components(g, batch=batch, lanes=8)
+    np.testing.assert_array_equal(res.labels, ref_components(g),
+                                  err_msg=f"{name} batch={batch}")
+    ids, sizes = np.unique(res.labels, return_counts=True)
+    assert res.num_components == ids.size
+    np.testing.assert_array_equal(res.component_ids, ids)
+    np.testing.assert_array_equal(res.sizes, sizes)
+    assert res.sizes.sum() == g.n
+    # the sweep count is the MS-BFS payoff: at most ceil(C / batch) sweeps
+    # would be needed if every root hit a distinct component; in-batch
+    # merges can spend roots on shared components, but every sweep still
+    # retires >= 1 component
+    assert -(-res.num_components // batch) <= res.sweeps
+    assert res.sweeps <= res.num_components
+    assert res.roots_used <= res.sweeps * batch
+
+
+@pytest.mark.parametrize("name,g", GRAPHS, ids=[n for n, _ in GRAPHS])
+def test_closeness_exact_matches_reference(name, g):
+    res = closeness_centrality(g, sources=None, chunk=16, lanes=8)
+    assert res.method == "exact" and res.num_sources == g.n
+    np.testing.assert_allclose(res.closeness, ref_closeness(g),
+                               rtol=1e-12, err_msg=name)
+
+
+def test_closeness_sampled_all_sources_equals_exact():
+    """Sampling every vertex must reproduce the exact numbers exactly —
+    the estimator's scale factor is constructed for this reduction."""
+    g = zoo_graph()
+    exact = closeness_centrality(g, sources=None, lanes=8)
+    sampled = closeness_centrality(g, sources=g.n, seed=7, lanes=8)
+    np.testing.assert_allclose(sampled.closeness, exact.closeness,
+                               rtol=1e-12)
+
+
+def test_closeness_sampled_estimates_converge():
+    """On a connected graph, the sampled estimator tracks exact closeness
+    (rank of the hub + bounded relative error at half coverage)."""
+    g = star_graph(33)
+    exact = closeness_centrality(g, sources=None, lanes=8)
+    est = closeness_centrality(g, sources=16, seed=0, lanes=8)
+    assert est.method == "sampled"
+    assert np.argmax(est.closeness) == np.argmax(exact.closeness) == 0
+    hub_err = abs(est.closeness[0] - exact.closeness[0]) / exact.closeness[0]
+    assert hub_err < 0.5, hub_err
+
+
+@pytest.mark.parametrize("name,g", GRAPHS, ids=[n for n, _ in GRAPHS])
+@pytest.mark.parametrize("k", [0, 1, 3])
+def test_khop_equals_depth_filtered_bfs(name, g, k):
+    rp, ci = to_numpy_adj(g)
+    sources = np.asarray([0, g.n // 2, g.n - 1], np.int32)
+    res = khop_neighborhood(g, sources, k, lanes=4)
+    mask = res.member_mask()                      # unpacked lane words
+    for i, s in enumerate(sources):
+        dref = bfs_reference(rp, ci, int(s))[1]
+        expect = (dref >= 0) & (dref <= k)
+        np.testing.assert_array_equal(mask[:, i], expect,
+                                      err_msg=f"{name} k={k} s={s}")
+        np.testing.assert_array_equal(res.members(i), np.flatnonzero(expect))
+        assert res.counts[i] == expect.sum()
+
+
+def test_sampler_khop_node_sets_fast_path():
+    """``graph.sampler.khop_node_sets`` (the GNN-sampler deliverable)
+    returns exact depth-filtered neighbourhoods per seed."""
+    from repro.graph.sampler import khop_node_sets
+    g = rmat_small()
+    rp, ci = to_numpy_adj(g)
+    seeds = [0, g.n // 3, g.n - 1]
+    sets, res = khop_node_sets(g, seeds, 2, lanes=4)
+    assert len(sets) == len(seeds) and res.k == 2
+    for i, s in enumerate(seeds):
+        dref = bfs_reference(rp, ci, int(s))[1]
+        expect = np.flatnonzero((dref >= 0) & (dref <= 2))
+        np.testing.assert_array_equal(sets[i], expect)
+        assert res.counts[i] == expect.size
+
+
+def test_reachability_pairwise_hops():
+    g = zoo_graph()
+    rp, ci = to_numpy_adj(g)
+    sources = np.asarray([0, 10, 18])
+    targets = np.asarray([4, 15, 0, 18])
+    hops = reachability(g, sources, targets, lanes=4)
+    for i, s in enumerate(sources):
+        dref = bfs_reference(rp, ci, int(s))[1]
+        np.testing.assert_array_equal(hops[i], dref[targets])
+
+
+@pytest.mark.parametrize("name,g", GRAPHS, ids=[n for n, _ in GRAPHS])
+def test_diameter_bounds_bracket_true_diameter(name, g):
+    d = ref_depths_all(g)
+    res = diameter_bounds(g, num_seeds=4, sweeps=3, seed=0, lanes=4)
+    # the true diameter of the witness component
+    in_comp = ref_components(g) == res.component
+    diam = int(d[np.ix_(in_comp, in_comp)].max())
+    assert res.lower <= diam <= res.upper, (name, res.lower, diam, res.upper)
+    assert (res.eccentricities >= 0).all()
+
+
+def test_diameter_double_sweep_exact_on_path():
+    """The double sweep is exact on trees: sweep 2 starts from a path
+    endpoint, so the lower bound reaches the full diameter."""
+    g = path_graph(14)
+    res = diameter_bounds(g, num_seeds=2, sweeps=2, seed=1, lanes=2)
+    assert res.lower == 13
+
+
+def test_query_api_dispatch_and_shared_engine():
+    g = zoo_graph()
+    eng = LaneEngine(g, lanes=8)
+    comps = run_query(eng, ComponentsQuery(batch=8))
+    np.testing.assert_array_equal(comps.labels, ref_components(g))
+    clo = run_query(eng, ClosenessQuery(sources=None))
+    np.testing.assert_allclose(clo.closeness, ref_closeness(g), rtol=1e-12)
+    hops = run_query(eng, KHopQuery(sources=(0, 10), k=2))
+    assert hops.k == 2 and hops.counts.shape == (2,)
+    diam = run_query(eng, DiameterQuery(num_seeds=2, sweeps=2))
+    assert 0 <= diam.lower <= diam.upper
+    with pytest.raises(TypeError):
+        run_query(eng, object())
+    with pytest.raises(ValueError):   # engine overrides on a built engine
+        run_query(eng, ComponentsQuery(), lanes=4)
+
+
+def test_engine_sweep_depth_only_contract():
+    """Analytics sweeps skip the parent derivation (zero-width parent);
+    depths are identical to the parents-on sweep."""
+    g = rmat_small()
+    eng = LaneEngine(g, lanes=8)
+    res = eng.sweep([0, 5])
+    assert res.parent.shape == (g.n, 0)
+    full = eng.sweep([0, 5], derive_parents=True)
+    assert full.parent.shape == (g.n, 2)
+    np.testing.assert_array_equal(np.asarray(res.depth),
+                                  np.asarray(full.depth))
+
+
+def test_adaptive_lanes_flow_through_engine():
+    from repro.core.packed import adaptive_lane_pool
+    g = rmat_small()
+    eng = LaneEngine(g, lanes=None)
+    assert eng.lanes_for(100) == adaptive_lane_pool(100, g.n, g.m)
+    eng_pinned = LaneEngine(g, lanes=32)
+    assert eng_pinned.lanes_for(100) == 32
+
+
+def test_serve_bfs_plain_bfs_requests():
+    """``bfs_requests`` is the PR-2 compatibility surface: a plain root
+    list served as all-bfs requests through the multi-workload loop."""
+    from repro.graph.generator import sample_roots
+    from repro.launch.serve_bfs import bfs_requests, serve
+    g = rmat_graph(8, 8, seed=1)
+    roots = sample_roots(g, 10, seed=2)
+    requests = bfs_requests(roots)
+    stats = serve(g, requests, lanes=8, burst=4, every=2, validate=True)
+    assert stats["validated"] and stats["requests"] == 10
+    assert set(stats["per_type"]) == {"bfs"}
+    assert stats["per_type"]["bfs"]["count"] == 10
+
+
+def test_serve_bfs_mixed_workloads():
+    """The serving loop answers a mixed analytics workload through one
+    engine sweep with per-type sojourn stats — and the khop/reach/
+    closeness answers match the offline references."""
+    from repro.launch.serve_bfs import make_requests, serve
+    g = rmat_graph(8, 8, seed=0)
+    rp, ci = to_numpy_adj(g)
+    requests = make_requests(g, 12, mix="bfs:2,khop:2,reach:1,closeness:1",
+                             seed=4, khop_k=2, closeness_sources=4)
+    kinds = {r.qtype for r in requests}
+    assert len(kinds) > 1, "mix must actually mix"
+    stats = serve(g, requests, lanes=8, burst=4, every=2, validate=True)
+    assert stats["validated"]
+    assert set(stats["per_type"]) == kinds
+    for kind, t in stats["per_type"].items():
+        assert t["count"] >= 1
+        assert t["sojourn_layers"]["max"] >= 1
+    total = sum(t["count"] for t in stats["per_type"].values())
+    assert total == len(requests) == stats["requests"]
+    for req in requests:
+        if req.qtype == "khop":
+            dref = bfs_reference(rp, ci, int(req.roots[0]))[1]
+            assert req.answer["size"] == ((dref >= 0) & (dref <= req.k)).sum()
+        elif req.qtype == "reach":
+            dref = bfs_reference(rp, ci, int(req.roots[0]))[1]
+            assert req.answer["hops"] == dref[req.target]
+        elif req.qtype == "closeness":
+            d = np.stack([bfs_reference(rp, ci, int(s))[1]
+                          for s in req.roots], axis=1)
+            c = closeness_from_depths(d, g.n)
+            assert req.answer["top_vertex"] == int(np.argmax(c))
+
+
+DIST_CODE = """
+import numpy as np
+from repro.analytics import (LaneEngine, closeness_centrality,
+                             connected_components, diameter_bounds,
+                             khop_neighborhood)
+from repro.core.csr import from_edges
+from repro.graph.generator import rmat_graph
+
+src = np.concatenate([np.arange(5), np.full(5, 10), [3, 3, 12]])
+dst = np.concatenate([np.arange(1, 6), np.arange(11, 16), [3, 4, 13]])
+graphs = [from_edges(src, dst, 20), rmat_graph(8, 4, seed=3)]
+for g in graphs:
+    host = LaneEngine(g, lanes=8)
+    dist = LaneEngine(g, lanes=8, ndev=2)
+    assert dist.ndev == 2 and dist.mesh.devices.size == 2
+    a = connected_components(host, batch=8)
+    b = connected_components(dist, batch=8)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    assert a.num_components == b.num_components and a.sweeps == b.sweeps
+    ca = closeness_centrality(host, sources=None, chunk=16)
+    cb = closeness_centrality(dist, sources=None, chunk=16)
+    np.testing.assert_allclose(ca.closeness, cb.closeness, rtol=0, atol=0)
+    ka = khop_neighborhood(host, [0, g.n // 2], 2)
+    kb = khop_neighborhood(dist, [0, g.n // 2], 2)
+    np.testing.assert_array_equal(ka.words, kb.words)
+    np.testing.assert_array_equal(ka.counts, kb.counts)
+    da = diameter_bounds(host, num_seeds=3, sweeps=2, seed=0)
+    db = diameter_bounds(dist, num_seeds=3, sweeps=2, seed=0)
+    assert (da.lower, da.upper, da.component) == (db.lower, db.upper,
+                                                  db.component)
+print("ANALYTICS_DIST_OK")
+"""
+
+
+def test_analytics_ndev2_parity():
+    """Every analytics workload on the ndev=2 sharded engine must equal
+    the host engine bit-for-bit (the engines are bit-identical, so the
+    analytics layered on them must be too)."""
+    out = run_in_subprocess(DIST_CODE, devices=2)
+    assert "ANALYTICS_DIST_OK" in out

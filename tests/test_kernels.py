@@ -7,15 +7,10 @@ import pytest
 from repro.core import bitmap
 from repro.core.csr import ell_pad, to_numpy_adj
 from repro.graph.generator import rmat_graph, uniform_random_graph
-from repro.kernels.bottom_up_probe.kernel import bottom_up_probe_pallas
-from repro.kernels.bottom_up_probe.ref import bottom_up_probe_ref
-from repro.kernels.ell_spmm.kernel import ell_spmm_pallas
-from repro.kernels.ell_spmm.ops import spmm_aggregate
-from repro.kernels.ell_spmm.ref import ell_spmm_ref
-from repro.kernels.msbfs_probe.kernel import msbfs_probe_pallas
-from repro.kernels.msbfs_probe.ref import msbfs_probe_ref
-from repro.kernels.topdown_scan.kernel import topdown_scan_pallas
-from repro.kernels.topdown_scan.ref import topdown_scan_ref
+from repro.kernels import (bottom_up_probe_pallas, bottom_up_probe_ref,
+                           ell_spmm_pallas, ell_spmm_ref, msbfs_probe_pallas,
+                           msbfs_probe_ref, spmm_aggregate,
+                           topdown_scan_pallas, topdown_scan_ref)
 
 
 @pytest.mark.parametrize("scale,ef,seed", [(8, 4, 0), (9, 8, 1), (10, 16, 2),

@@ -5,11 +5,15 @@ comparison is exact array equality on parent AND depth, plus Graph500
 validator equivalence. Ring/star fixtures exercise lanes that terminate at
 different layers; the lane-word sweep covers R below/at/above one word.
 """
+from contextlib import contextmanager
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import msbfs as ms
+from repro.core import packed
 from repro.core.csr import from_edges, to_numpy_adj
 from repro.core.hybrid import bfs
 from repro.core.msbfs import (msbfs, msbfs_engine_enqueue, msbfs_engine_idle,
@@ -19,8 +23,7 @@ from repro.core.msbfs import (msbfs, msbfs_engine_enqueue, msbfs_engine_idle,
 from repro.core.ref import bfs_reference
 from repro.graph.generator import rmat_graph, sample_roots
 from repro.graph.validate import validate_bfs_tree
-from repro.kernels.msbfs_probe.kernel import msbfs_probe_pallas
-from repro.kernels.msbfs_probe.ref import msbfs_probe_ref
+from repro.kernels import msbfs_probe_pallas, msbfs_probe_ref
 
 
 @pytest.fixture(scope="module")
@@ -118,24 +121,86 @@ def test_msbfs_pallas_probe_end_to_end(g_rmat):
     _assert_lanes_match_serial(g_rmat, roots, out)
 
 
-def test_pack_unpack_roundtrip():
-    rng = np.random.default_rng(0)
-    for r in (1, 31, 32, 33, 64):
-        mask = jnp.asarray(rng.random((17, r)) < 0.5)
+@contextmanager
+def lane_word_bits(bits):
+    """Run packed-word code under a different ``packed.LANE_WORD_BITS`` —
+    the single knob of the ROADMAP uint64-lane rung. The packed helpers
+    read the constant (and derive the word dtype) at call time, so the
+    swap is a plain module-global override; 64-bit words additionally
+    need jax x64 (without it jnp silently downcasts uint64 to uint32)."""
+    old = packed.LANE_WORD_BITS
+    packed.LANE_WORD_BITS = bits
+    try:
+        if bits == 64:
+            with jax.experimental.enable_x64():
+                yield
+        else:
+            yield
+    finally:
+        packed.LANE_WORD_BITS = old
+
+
+@pytest.mark.parametrize("bits", [32, 64])
+def test_pack_unpack_roundtrip(bits):
+    with lane_word_bits(bits):
+        rng = np.random.default_rng(0)
+        for r in (1, bits - 1, bits, bits + 1, 2 * bits):
+            mask = jnp.asarray(rng.random((17, r)) < 0.5)
+            words = pack_lanes(mask)
+            assert words.dtype == packed.word_dtype()
+            assert words.shape == (17, packed.num_lane_words(r))
+            np.testing.assert_array_equal(np.asarray(unpack_lanes(words, r)),
+                                          np.asarray(mask))
+
+
+@pytest.mark.parametrize("bits", [32, 64])
+def test_pack_lanes_top_bit(bits):
+    """Lane ``bits - 1`` must land in the word's MSB — the first bit a
+    32-bit-assuming shift would lose at 64-bit words."""
+    with lane_word_bits(bits):
+        mask = jnp.zeros((3, bits), jnp.bool_).at[1, bits - 1].set(True)
         words = pack_lanes(mask)
-        assert words.shape == (17, ms.num_lane_words(r))
-        np.testing.assert_array_equal(np.asarray(unpack_lanes(words, r)),
-                                      np.asarray(mask))
+        assert words.shape == (3, 1)
+        expect = np.zeros((3, 1), np.uint64)
+        expect[1, 0] = np.uint64(1) << np.uint64(bits - 1)
+        np.testing.assert_array_equal(np.asarray(words).astype(np.uint64),
+                                      expect)
 
 
-def test_segment_or_with_empty_and_trailing_rows():
+@pytest.mark.parametrize("bits", [32, 64])
+def test_segment_or_with_empty_and_trailing_rows(bits):
     """Empty rows (including trailing ones, whose row start == m) OR to 0
-    and must not corrupt their neighbours' segments."""
-    # rows: [a, b], [], [c], [] -> row_ptr [0, 2, 2, 3, 3]
-    row_ptr = jnp.asarray([0, 2, 2, 3, 3], jnp.int32)
-    vals = jnp.asarray([[1], [4], [8]], jnp.uint32)
-    out = np.asarray(segment_or(vals, row_ptr))
-    np.testing.assert_array_equal(out, [[5], [0], [8], [0]])
+    and must not corrupt their neighbours' segments — at either lane-word
+    width (the 64-bit values exercise bits a uint32 pipeline would
+    truncate)."""
+    with lane_word_bits(bits):
+        dt = np.uint64 if bits == 64 else np.uint32
+        hi = 1 << (bits - 1)
+        # rows: [a, b], [], [c], [] -> row_ptr [0, 2, 2, 3, 3]
+        row_ptr = jnp.asarray([0, 2, 2, 3, 3], jnp.int32)
+        vals = jnp.asarray(np.asarray([[1], [4 + hi], [8]], dt))
+        out = np.asarray(segment_or(vals, row_ptr))
+        np.testing.assert_array_equal(
+            out, np.asarray([[5 + hi], [0], [8], [0]], dt))
+
+
+@pytest.mark.parametrize("bits", [32, 64])
+def test_depth_slice_words_roundtrip(bits):
+    """depth_slice_words repacks depth bands into the engines' bit layout
+    for any word width (the k-hop read-out surface)."""
+    with lane_word_bits(bits):
+        rng = np.random.default_rng(1)
+        r = bits + 3                       # spill into a second word
+        depth = jnp.asarray(rng.integers(-1, 5, size=(29, r)), jnp.int32)
+        words = packed.depth_slice_words(depth, 2)
+        assert words.dtype == packed.word_dtype()
+        assert words.shape == (29, packed.num_lane_words(r))
+        band = (np.asarray(depth) >= 0) & (np.asarray(depth) <= 2)
+        np.testing.assert_array_equal(np.asarray(unpack_lanes(words, r)),
+                                      band)
+        layer1 = packed.depth_slice_words(depth, 1, min_depth=1)
+        np.testing.assert_array_equal(
+            np.asarray(unpack_lanes(layer1, r)), np.asarray(depth) == 1)
 
 
 @pytest.mark.parametrize("scale,ef,seed", [(8, 4, 0), (9, 8, 1), (7, 32, 2)])
