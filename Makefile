@@ -9,6 +9,8 @@
 #   make bench-dist       sharded MS-BFS scaling curve (ndev 1/2/4)
 #   make bench-analytics  analytics workloads (components/closeness/khop)
 #                         TEPS-equivalent throughput on the lane engine
+#   make bench-sssp       weighted-path workloads (delta-stepping SSSP /
+#                         weighted closeness) on the tropical lane engine
 #   make ci-bench         fast benches -> BENCH_pr.json + regression gate
 #   make lint             ruff check + format check (rule set: ruff.toml)
 
@@ -16,14 +18,15 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-properties test-dist bench-smoke bench bench-dist \
-        bench-analytics ci-bench lint
+        bench-analytics bench-sssp ci-bench lint
 
 test:
 	$(PYTHON) -m pytest -x -q
 
 test-properties:
 	MSBFS_PROP_EXAMPLES=25 $(PYTHON) -m pytest \
-	    tests/test_msbfs_properties.py tests/test_validate.py -q
+	    tests/test_msbfs_properties.py tests/test_sssp_properties.py \
+	    tests/test_validate.py -q
 
 test-dist:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 $(PYTHON) -m pytest \
@@ -41,6 +44,9 @@ bench-dist:
 
 bench-analytics:
 	$(PYTHON) benchmarks/analytics_bench.py --scale 12
+
+bench-sssp:
+	$(PYTHON) benchmarks/sssp_bench.py --scale 12
 
 ci-bench:
 	$(PYTHON) benchmarks/ci_bench.py --out BENCH_pr.json \

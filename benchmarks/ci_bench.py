@@ -8,6 +8,8 @@ Collects one higher-is-better throughput number per benchmark:
   (scale 10, R=64);
 * the analytics smoke (components / closeness / khop TEPS-equivalents on
   the lane engine, ``analytics_bench.bench_points`` at scale 10);
+* the weighted-path smoke (delta-stepping SSSP / unit-weight anchor /
+  weighted closeness, ``sssp_bench.bench_points`` at scale 10);
 * the distributed MS-BFS smoke (``dist_msbfs_teps.py --smoke``), run in a
   subprocess so the forced host-device count never leaks into the
   single-device timings.
@@ -73,6 +75,15 @@ def _bench_analytics(scale: int = 10) -> dict:
             for k, v in bench_points(scale).items()}
 
 
+def _bench_sssp(scale: int = 10) -> dict:
+    """Weighted-path smoke: delta-stepping sweep + unit-weight anchor +
+    weighted closeness TEPS-equivalents (``sssp_bench.bench_points``) —
+    weighted regressions gate exactly like BFS TEPS."""
+    from benchmarks.sssp_bench import bench_points
+    return {f"sssp.{k}": dict(value=v, unit="teps_equiv")
+            for k, v in bench_points(scale).items()}
+
+
 def _bench_dist_smoke() -> dict:
     here = os.path.dirname(os.path.abspath(__file__))
     with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
@@ -125,6 +136,7 @@ def main() -> None:
     benches.update(_bench_run_py())
     benches.update(_bench_msbfs())
     benches.update(_bench_analytics())
+    benches.update(_bench_sssp())
     if not args.skip_dist:
         benches.update(_bench_dist_smoke())
     pr = dict(tolerance=args.tolerance,

@@ -1,0 +1,105 @@
+"""Weighted-path (SSSP) throughput on the delta-stepping lane engine.
+
+One TEPS-equivalent number per workload (higher is better), compile
+excluded by a warmup run — the weighted analog of ``analytics_bench.py``.
+The work numerator is a fixed PROXY per workload (R traversals covering
+~the giant component's m/2 undirected edges each), stable across runs by
+construction, which is what the regression gate needs:
+
+* ``pipelined`` — R sources through one pipelined delta-stepping sweep
+  (random uniform weights, default delta);
+* ``unitweight`` — the same sweep over unit weights at delta=1, i.e. the
+  boolean-anchor workload (bucket walk == BFS layers): its gap to the
+  ``msbfs.batched`` point prices the dense-float-lane overhead;
+* ``wcloseness`` — sampled weighted closeness (k sources through the
+  chunked estimator).
+
+  PYTHONPATH=src python benchmarks/sssp_bench.py --scale 12
+  PYTHONPATH=src python benchmarks/sssp_bench.py --smoke --json out.json
+
+``--json`` writes {name: teps} points for the CI regression gate
+(``ci_bench.py`` embeds these under ``sssp.*``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# allow `python benchmarks/sssp_bench.py` (sys.path[0] = benchmarks/)
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO not in sys.path:
+    sys.path.insert(0, _REPO)
+
+
+def _timed(fn):
+    """(wall seconds, result) with one warmup call to absorb compiles."""
+    fn()
+    t0 = time.perf_counter()
+    out = fn()
+    return time.perf_counter() - t0, out
+
+
+def bench_points(scale: int, edgefactor: int = 16, seed: int = 0,
+                 sources: int = 32, lanes: int = 32,
+                 closeness_sources: int = 32) -> dict[str, float]:
+    """TEPS-equivalent throughput per weighted workload at one scale."""
+    import numpy as np
+
+    from repro.analytics import LaneEngine, weighted_closeness_centrality
+    from repro.core.csr import from_weighted_edges
+    from repro.graph.generator import rmat_weighted_graph, sample_roots
+    from repro.traversal import sssp_pipelined
+
+    wg = rmat_weighted_graph(scale, edgefactor, seed)
+    roots = sample_roots(wg, sources, seed=1)
+    points = {}
+
+    dt, _ = _timed(lambda: sssp_pipelined(wg, roots, lanes=lanes))
+    points[f"pipelined_s{scale}_R{len(roots)}"] = (
+        len(roots) * (wg.m // 2) / dt)
+
+    unit = from_weighted_edges(np.asarray(wg.src_idx),
+                               np.asarray(wg.col_idx),
+                               np.ones(wg.m), wg.n, symmetrize=False,
+                               drop_self_loops=False)
+    dt, _ = _timed(lambda: sssp_pipelined(unit, roots, delta=1.0,
+                                          lanes=lanes))
+    points[f"unitweight_s{scale}_R{len(roots)}"] = (
+        len(roots) * (unit.m // 2) / dt)
+
+    k = min(closeness_sources, wg.n)
+    eng = LaneEngine(wg, lanes=lanes)
+    dt, _ = _timed(lambda: weighted_closeness_centrality(
+        eng, sources=k, seed=2, chunk=lanes))
+    points[f"wcloseness_s{scale}_k{k}"] = k * (wg.m // 2) / dt
+    return points
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--edgefactor", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sources", type=int, default=32)
+    ap.add_argument("--lanes", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI point: scale 10")
+    ap.add_argument("--json", default=None, help="write {name: teps} here")
+    args = ap.parse_args()
+
+    scale = 10 if args.smoke else args.scale
+    points = bench_points(scale, args.edgefactor, args.seed,
+                          sources=args.sources, lanes=args.lanes)
+    for name, teps in points.items():
+        print(f"{name:32s} {teps / 1e6:10.2f} MTEPS-equiv")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(points, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,10 @@ connected components, closeness centrality, k-hop neighbourhood /
 reachability queries, and diameter bounds, all computed by batching
 traversals through the bit-lane engines (``repro.core.msbfs`` on one
 host, ``repro.core.dist_msbfs`` across a mesh) — many analytics
-traversals per packed sweep.
+traversals per packed sweep. Engines built from a ``WeightedCSRGraph``
+additionally serve the weighted workloads (``SSSPQuery``,
+``WeightedClosenessQuery``) on the delta-stepping tropical lanes of
+``repro.traversal``.
 
 Entry points: build queries from ``api`` (``ComponentsQuery``, ...) and
 dispatch with ``run_query``, or call the workload functions directly
@@ -16,21 +19,27 @@ sweeps.
 """
 from repro.analytics.api import (ClosenessQuery, ComponentsQuery,
                                  DiameterQuery, KHopQuery, QUERY_TYPES,
+                                 SSSPQuery, WeightedClosenessQuery,
                                  run_query)
 from repro.analytics.closeness import (ClosenessResult, closeness_centrality,
-                                       closeness_from_depths)
+                                       closeness_from_depths,
+                                       closeness_from_dists)
 from repro.analytics.components import (ComponentsResult,
                                         connected_components)
 from repro.analytics.diameter import DiameterResult, diameter_bounds
 from repro.analytics.engine import LaneEngine, as_engine
 from repro.analytics.khop import (KHopResult, khop_neighborhood,
                                   reachability)
+from repro.analytics.weighted import (SSSPDistancesResult, sssp_distances,
+                                      weighted_closeness_centrality)
 
 __all__ = [
     "ClosenessQuery", "ClosenessResult", "ComponentsQuery",
     "ComponentsResult", "DiameterQuery", "DiameterResult", "KHopQuery",
-    "KHopResult", "LaneEngine", "QUERY_TYPES", "as_engine",
-    "closeness_centrality", "closeness_from_depths",
+    "KHopResult", "LaneEngine", "QUERY_TYPES", "SSSPDistancesResult",
+    "SSSPQuery", "WeightedClosenessQuery", "as_engine",
+    "closeness_centrality", "closeness_from_depths", "closeness_from_dists",
     "connected_components", "diameter_bounds", "khop_neighborhood",
-    "reachability", "run_query",
+    "reachability", "run_query", "sssp_distances",
+    "weighted_closeness_centrality",
 ]

@@ -27,10 +27,12 @@ from repro.analytics.components import (ComponentsResult,
 from repro.analytics.diameter import DiameterResult, diameter_bounds
 from repro.analytics.engine import as_engine
 from repro.analytics.khop import KHopResult, khop_neighborhood
+from repro.analytics.weighted import (SSSPDistancesResult, sssp_distances,
+                                      weighted_closeness_centrality)
 
 __all__ = [
     "ClosenessQuery", "ComponentsQuery", "DiameterQuery", "KHopQuery",
-    "QUERY_TYPES", "run_query",
+    "QUERY_TYPES", "SSSPQuery", "WeightedClosenessQuery", "run_query",
 ]
 
 
@@ -75,10 +77,37 @@ class DiameterQuery:
     kind = "diameter"
 
 
-QUERY_TYPES = (ComponentsQuery, ClosenessQuery, KHopQuery, DiameterQuery)
+@dataclass(frozen=True)
+class SSSPQuery:
+    """Shortest-path distances from each source (one tropical lane each,
+    delta-stepping sweep). Needs a weighted engine; ``delta=None`` uses
+    the ``traversal.sssp.default_delta`` bucket width."""
+    sources: tuple[int, ...]
+    delta: float | None = None
 
-Query = ComponentsQuery | ClosenessQuery | KHopQuery | DiameterQuery
-Result = ComponentsResult | ClosenessResult | KHopResult | DiameterResult
+    kind = "sssp"
+
+
+@dataclass(frozen=True)
+class WeightedClosenessQuery:
+    """Weighted closeness centrality for every vertex — ``sources``
+    follows the ``ClosenessQuery`` rule (None exact / int sampled /
+    "auto" dispatch on n). Needs a weighted engine."""
+    sources: int | str | None = "auto"
+    seed: int = 0
+    chunk: int = 64              # dense float lanes per engine sweep
+    delta: float | None = None
+
+    kind = "weighted_closeness"
+
+
+QUERY_TYPES = (ComponentsQuery, ClosenessQuery, KHopQuery, DiameterQuery,
+               SSSPQuery, WeightedClosenessQuery)
+
+Query = (ComponentsQuery | ClosenessQuery | KHopQuery | DiameterQuery
+         | SSSPQuery | WeightedClosenessQuery)
+Result = (ComponentsResult | ClosenessResult | KHopResult | DiameterResult
+          | SSSPDistancesResult)
 
 
 def run_query(g_or_engine, query: Query, **engine_kwargs) -> Result:
@@ -98,6 +127,12 @@ def run_query(g_or_engine, query: Query, **engine_kwargs) -> Result:
     if isinstance(query, DiameterQuery):
         return diameter_bounds(eng, num_seeds=query.num_seeds,
                                sweeps=query.sweeps, seed=query.seed)
+    if isinstance(query, SSSPQuery):
+        return sssp_distances(eng, list(query.sources), delta=query.delta)
+    if isinstance(query, WeightedClosenessQuery):
+        return weighted_closeness_centrality(
+            eng, sources=query.sources, seed=query.seed, chunk=query.chunk,
+            delta=query.delta)
     raise TypeError(f"unknown analytics query type {type(query).__name__!r}"
                     f" — expected one of "
                     f"{[t.__name__ for t in QUERY_TYPES]}")

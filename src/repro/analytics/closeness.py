@@ -31,7 +31,8 @@ import numpy as np
 from repro.analytics.engine import as_engine, pad_roots
 
 __all__ = ["ClosenessResult", "closeness_centrality",
-           "closeness_from_depths"]
+           "closeness_from_depths", "closeness_from_dists",
+           "select_sources"]
 
 # auto mode: below this vertex count the exact sweep is cheap enough
 EXACT_N_THRESHOLD = 2048
@@ -53,27 +54,56 @@ class ClosenessResult:
         return [(int(v), float(self.closeness[v])) for v in order]
 
 
-def closeness_from_depths(depth: np.ndarray, n: int) -> np.ndarray:
-    """Wasserman–Faust closeness for all n vertices from a depth matrix
-    with one SOURCE PER COLUMN (rows: vertices, -1 unreached) — pass only
-    real source columns, trimming any sweep padding first.
+def select_sources(n: int, sources: int | str | None,
+                   seed: int) -> tuple[np.ndarray, str]:
+    """The closeness source-selection rule, shared by the hop-count and
+    weighted estimators (ONE implementation — the sampling scheme is part
+    of the estimator's contract): ``None`` -> all n vertices (exact), an
+    int -> that many distinct sampled vertices, ``"auto"`` -> exact for
+    small n, a capped sample otherwise. Returns (sources, method)."""
+    if sources == "auto":
+        sources = None if n <= EXACT_N_THRESHOLD else min(
+            n, SAMPLED_SOURCES_DEFAULT)
+    if sources is None:
+        return np.arange(n, dtype=np.int32), "exact"
+    k = int(sources)
+    if not 1 <= k <= n:
+        raise ValueError(f"sources must be in [1, {n}], got {k}")
+    rng = np.random.default_rng(seed)
+    src = np.sort(rng.choice(n, size=k, replace=False)).astype(np.int32)
+    return src, ("sampled" if k < n else "exact")
+
+
+def closeness_from_dists(dist: np.ndarray, n: int) -> np.ndarray:
+    """Wasserman–Faust closeness from a float distance matrix with one
+    SOURCE PER COLUMN (rows: vertices, inf unreached) — the weighted-path
+    generalization the SSSP lanes feed (``analytics.weighted``); the
+    hop-count form below is this with integer distances.
 
     With n columns (all sources) this IS the exact formula; the
     ``scale = n / k`` factor extrapolates reach counts and distance sums
     from a sample. Shared by the offline estimators here and the serving
     path's closeness queries (``repro.launch.serve_bfs``).
     """
-    depth = np.asarray(depth, np.int64)
-    reached = depth >= 0
+    dist = np.asarray(dist, np.float64)
+    reached = np.isfinite(dist)
     cnt = reached.sum(axis=1)                       # sources reaching v
-    sum_d = np.where(reached, depth, 0).sum(axis=1)
-    scale = n / depth.shape[1]
+    sum_d = np.where(reached, dist, 0.0).sum(axis=1)
+    scale = n / dist.shape[1]
     r_hat = scale * cnt                              # est. component size
     s_hat = scale * sum_d                            # est. distance sum
-    out = np.zeros(depth.shape[0], np.float64)
+    out = np.zeros(dist.shape[0], np.float64)
     ok = (cnt > 0) & (s_hat > 0) & (r_hat > 1)
     out[ok] = (r_hat[ok] - 1.0) ** 2 / (s_hat[ok] * max(n - 1, 1))
     return out
+
+
+def closeness_from_depths(depth: np.ndarray, n: int) -> np.ndarray:
+    """Hop-count closeness: int depth matrix, -1 unreached — the BFS-lane
+    instantiation of ``closeness_from_dists`` (int32 depths are exact in
+    float64, so the two agree bit-for-bit on unweighted sweeps)."""
+    depth = np.asarray(depth, np.int64)
+    return closeness_from_dists(np.where(depth >= 0, depth, np.inf), n)
 
 
 def closeness_centrality(g_or_engine, sources: int | str | None = "auto",
@@ -90,19 +120,7 @@ def closeness_centrality(g_or_engine, sources: int | str | None = "auto",
     """
     eng = as_engine(g_or_engine, **engine_kwargs)
     n = eng.n
-    if sources == "auto":
-        sources = None if n <= EXACT_N_THRESHOLD else min(
-            n, SAMPLED_SOURCES_DEFAULT)
-    if sources is None:
-        src = np.arange(n, dtype=np.int32)
-        method = "exact"
-    else:
-        k = int(sources)
-        if not 1 <= k <= n:
-            raise ValueError(f"sources must be in [1, {n}], got {k}")
-        rng = np.random.default_rng(seed)
-        src = np.sort(rng.choice(n, size=k, replace=False)).astype(np.int32)
-        method = "sampled" if k < n else "exact"
+    src, method = select_sources(n, sources, seed)
     chunk = max(1, min(chunk, src.size))
 
     depth_cols = np.empty((n, src.size), np.int32)

@@ -19,12 +19,19 @@ chunks, component batches, diameter re-sweeps) reuse the partition and the
 compiled engine executables (one compile per distinct root-batch size —
 the algorithms pad their batches to a fixed width for exactly this
 reason).
+
+Built from a ``WeightedCSRGraph`` the engine additionally serves
+*weighted* sweeps: ``sssp_sweep`` runs the delta-stepping tropical-lane
+engine (``repro.traversal.sssp``) over the same graph, and the weighted
+analytics workloads (``SSSPQuery`` / ``WeightedClosenessQuery``) dispatch
+through it. Boolean sweeps on a weighted engine simply ignore the
+weights (``WeightedCSRGraph.csr`` is the identical CSR).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.csr import CSRGraph
+from repro.core.csr import CSRGraph, WeightedCSRGraph
 from repro.core.hybrid import ALPHA_DEFAULT, BETA_DEFAULT
 from repro.core.msbfs import MSBFSResult, msbfs_pipelined
 from repro.core.packed import MODES, adaptive_lane_pool
@@ -51,13 +58,15 @@ def pad_roots(roots: np.ndarray, width: int) -> np.ndarray:
 class LaneEngine:
     """Host- or mesh-backed MS-BFS sweep runner shared by all analytics."""
 
-    def __init__(self, g: CSRGraph, *, ndev: int = 1, mesh=None,
-                 lanes: int | None = None, mode: str = "hybrid",
+    def __init__(self, g: CSRGraph | WeightedCSRGraph, *, ndev: int = 1,
+                 mesh=None, lanes: int | None = None, mode: str = "hybrid",
                  alpha: float = ALPHA_DEFAULT, beta: float = BETA_DEFAULT,
                  max_pos: int = 8, probe_impl: str = "xla"):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
-        self.g = g
+        self.wg = g if isinstance(g, WeightedCSRGraph) else None
+        self.g = g.csr if self.wg is not None else g
+        g = self.g
         self.lanes = lanes
         self.mode = mode
         self.alpha = alpha
@@ -114,6 +123,44 @@ class LaneEngine:
         return msbfs_pipelined(self.g, roots, self.mode, self.alpha,
                                self.beta, self.max_pos, self.probe_impl,
                                lanes, derive_parents=derive_parents)
+
+    @property
+    def weighted(self) -> bool:
+        return self.wg is not None
+
+    def sssp_lanes_for(self, num_roots: int) -> int:
+        """Dense-lane pool width for a weighted sweep: dense float32
+        lanes cost ~32x a packed bit lane, so a pinned bit-pool width is
+        NOT taken at face value — the tropical engine's own default caps
+        it (same rule as the serving loop); call ``sssp_pipelined``
+        directly to run a wider dense pool deliberately."""
+        from repro.traversal.sssp import DEFAULT_LANES
+        cap = min(self.lanes, DEFAULT_LANES) if self.lanes else DEFAULT_LANES
+        return max(1, min(num_roots, cap))
+
+    def sssp_sweep(self, roots, delta: float | None = None):
+        """One pipelined delta-stepping sweep over the engine's weighted
+        graph; returns ``repro.traversal.sssp.SSSPResult`` (``dist`` is
+        [n, R] float32, inf unreached). Requires the engine to have been
+        built from a ``WeightedCSRGraph``."""
+        if self.wg is None:
+            raise TypeError(
+                "weighted sweep on an unweighted engine — build the "
+                "LaneEngine from a WeightedCSRGraph (e.g. "
+                "graph.generator.rmat_weighted_graph) to serve "
+                "sssp/weighted-closeness queries")
+        if self.dg is not None:
+            raise NotImplementedError(
+                "distributed SSSP (the 1-D partition rung) is not built "
+                "yet — run weighted sweeps with ndev=1; see ROADMAP")
+        from repro.traversal.sssp import sssp_pipelined
+        roots = np.asarray(roots, np.int32).reshape(-1)
+        if roots.size < 1:
+            raise ValueError("need at least one source")
+        return sssp_pipelined(self.wg, roots, delta=delta,
+                              lanes=self.sssp_lanes_for(roots.size),
+                              max_pos=self.max_pos,
+                              relax_impl=self.probe_impl)
 
 
 def as_engine(g_or_engine, **kwargs) -> LaneEngine:

@@ -1,0 +1,115 @@
+"""Weighted analytics workloads on the tropical (SSSP) lane engine.
+
+The unweighted workloads read per-lane BFS *depths*; these read per-lane
+shortest-path *distances* from the delta-stepping engine
+(``repro.traversal.sssp``) through the same ``LaneEngine`` facade:
+
+* ``sssp_distances`` — batched single-source shortest paths: one dense
+  tropical lane per source, sources beyond the lane pool streamed
+  through the pending queue;
+* ``weighted_closeness_centrality`` — Wasserman–Faust closeness over
+  weighted distances, exact chunked all-sources or the sampled
+  Eppstein–Wang style estimator — the SAME accumulation/estimator code
+  as the unweighted version (``closeness_from_dists``), so sampling all
+  vertices again reduces exactly to the exact numbers.
+
+Engines must be built from a ``WeightedCSRGraph``; the boolean workloads
+keep working on the same engine (weights ignored).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.analytics.closeness import (ClosenessResult,
+                                       closeness_from_dists,
+                                       select_sources)
+from repro.analytics.engine import as_engine, pad_roots
+
+__all__ = ["SSSPDistancesResult", "sssp_distances",
+           "weighted_closeness_centrality"]
+
+
+@dataclass(frozen=True)
+class SSSPDistancesResult:
+    sources: np.ndarray          # int32[S]
+    dist: np.ndarray             # float32[n, S], inf unreached
+    delta: float                 # bucket width the sweep ran with
+    steps: np.ndarray            # int32[S] engine steps per source lane
+    truncated: np.ndarray        # bool[S] — lane hit the step cap: its
+    #                              column is a partial relaxation
+    meta: dict = field(default_factory=dict)
+
+    def reached(self) -> np.ndarray:
+        """bool[n, S] — vertices with a finite distance per source."""
+        return np.isfinite(self.dist)
+
+    def distances_to(self, targets) -> np.ndarray:
+        """float64[S, T] pairwise source->target distances (inf
+        unreachable) — the weighted analog of ``khop.reachability``."""
+        targets = np.asarray(targets, np.int64).reshape(-1)
+        return np.asarray(self.dist, np.float64)[targets].T
+
+
+def _resolve_delta(eng, delta: float | None) -> float | None:
+    """Pin ``delta=None`` to the graph default ONCE per workload call —
+    the engine would otherwise recompute it (a host copy of all m
+    weights) inside every chunk sweep, and the recorded metadata would
+    not name the width actually used."""
+    if delta is not None or not eng.weighted:
+        return delta              # unweighted: let sssp_sweep raise
+    from repro.traversal.sssp import default_delta
+    return float(default_delta(eng.wg))
+
+
+def sssp_distances(g_or_engine, sources, delta: float | None = None,
+                   **engine_kwargs) -> SSSPDistancesResult:
+    """Shortest-path distances from each source, one pipelined
+    delta-stepping sweep. ``delta=None`` picks the engine default
+    (``traversal.sssp.default_delta``)."""
+    eng = as_engine(g_or_engine, **engine_kwargs)
+    delta = _resolve_delta(eng, delta)
+    sources = np.asarray(sources, np.int32).reshape(-1)
+    res = eng.sssp_sweep(sources, delta=delta)
+    return SSSPDistancesResult(
+        sources=sources, dist=np.asarray(res.dist), delta=float(delta),
+        steps=np.asarray(res.steps),
+        truncated=np.asarray(res.truncated), meta=dict(ndev=eng.ndev))
+
+
+def weighted_closeness_centrality(g_or_engine,
+                                  sources: int | str | None = "auto",
+                                  seed: int = 0, chunk: int = 64,
+                                  delta: float | None = None,
+                                  **engine_kwargs) -> ClosenessResult:
+    """Weighted closeness centrality of every vertex — the unweighted
+    estimator with SSSP distances standing in for BFS depths.
+
+    ``sources`` follows the same rule: ``None`` forces exact
+    all-sources, an int samples that many, ``"auto"`` dispatches on n.
+    ``chunk`` bounds sources per engine sweep (dense float lanes — the
+    default is narrower than the packed-lane chunk).
+    """
+    eng = as_engine(g_or_engine, **engine_kwargs)
+    delta = _resolve_delta(eng, delta)
+    n = eng.n
+    src, method = select_sources(n, sources, seed)
+    chunk = max(1, min(chunk, src.size))
+
+    dist_cols = np.empty((n, src.size), np.float32)
+    sweeps = 0
+    truncated = 0
+    for lo in range(0, src.size, chunk):
+        real = min(chunk, src.size - lo)
+        res = eng.sssp_sweep(pad_roots(src[lo:lo + chunk], chunk),
+                             delta=delta)
+        dist_cols[:, lo:lo + real] = np.asarray(res.dist)[:, :real]
+        truncated += int(np.asarray(res.truncated)[:real].sum())
+        sweeps += 1
+    closeness = closeness_from_dists(dist_cols, n)
+    return ClosenessResult(
+        closeness=closeness, method=method, num_sources=int(src.size),
+        seed=None if method == "exact" else seed,
+        meta=dict(chunk=chunk, sweeps=sweeps, ndev=eng.ndev,
+                  weighted=True, delta=delta, truncated_lanes=truncated))

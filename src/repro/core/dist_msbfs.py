@@ -58,7 +58,7 @@ from repro.core.msbfs import (MAX_LANES, MSBFSResult, msbfs_engine_enqueue,
 from repro.core.packed import (LANE_WORD_BITS, MODES, adaptive_lane_pool,
                                dispatch_packed_step, lane_counters,
                                num_lane_words, pack_lanes, queue_claims,
-                               select_direction, unpack_lanes)
+                               select_direction, unpack_lanes, word_dtype)
 
 __all__ = [
     "DistGraph", "DistPipelineState", "allreduce_or", "dist_msbfs",
@@ -143,8 +143,8 @@ def dist_msbfs_engine_init(dg: DistGraph, mesh: Mesh, capacity: int,
     w = num_lane_words(lanes)
     cap = capacity
     return DistPipelineState(
-        frontier=jnp.zeros((dg.n, w), jnp.uint32),
-        visited=jnp.zeros((ndev, n_loc, w), jnp.uint32),
+        frontier=jnp.zeros((dg.n, w), word_dtype()),
+        visited=jnp.zeros((ndev, n_loc, w), word_dtype()),
         depth=jnp.full((ndev, n_loc, lanes), -1, jnp.int32),
         lane_layer=jnp.zeros((lanes,), jnp.int32),
         lane_qidx=jnp.full((lanes,), cap, jnp.int32),
@@ -188,6 +188,10 @@ def _dist_pipeline_body(g_loc: CSRGraph, base, s: DistPipelineState,
     lanes = s.lane_qidx.shape[0]
     cap = s.queue.shape[0]
     w = s.frontier.shape[1]
+    # dynamic_slice wants all start indices in ONE dtype; a bare 0 would
+    # weak-type to int64 under x64 (the u64 lane-word rung) and clash
+    # with the int32 device base
+    col0 = jnp.zeros((), jnp.asarray(base).dtype)
 
     # --- refill: replicated claim logic, row-local seat writes -----------
     def do_refill(s: DistPipelineState) -> DistPipelineState:
@@ -196,8 +200,8 @@ def _dist_pipeline_body(g_loc: CSRGraph, base, s: DistPipelineState,
         onehot = claim[None, :] & (root[None, :]
                                    == jnp.arange(n, dtype=jnp.int32)[:, None])
         fresh = pack_lanes(onehot)                            # uint32[n, W]
-        onehot_loc = jax.lax.dynamic_slice(onehot, (base, 0), (n_loc, lanes))
-        fresh_loc = jax.lax.dynamic_slice(fresh, (base, 0), (n_loc, w))
+        onehot_loc = jax.lax.dynamic_slice(onehot, (base, col0), (n_loc, lanes))
+        fresh_loc = jax.lax.dynamic_slice(fresh, (base, col0), (n_loc, w))
         return s._replace(
             frontier=s.frontier | fresh,
             visited=s.visited | fresh_loc,
@@ -214,7 +218,7 @@ def _dist_pipeline_body(g_loc: CSRGraph, base, s: DistPipelineState,
 
     # --- per-lane direction from psum-merged global counters -------------
     active = s.lane_qidx < cap
-    frontier_loc = jax.lax.dynamic_slice(s.frontier, (base, 0), (n_loc, w))
+    frontier_loc = jax.lax.dynamic_slice(s.frontier, (base, col0), (n_loc, w))
     frontier_b = unpack_lanes(frontier_loc, lanes)
     visited_b = unpack_lanes(s.visited, lanes)
     pe_f, pv_f, pe_u = lane_counters(g_loc, frontier_b, visited_b)
@@ -230,7 +234,10 @@ def _dist_pipeline_body(g_loc: CSRGraph, base, s: DistPipelineState,
 
     tr_row = jnp.clip(s.lane_layer, 0, MAX_TRACE - 1)
     tr_col = jnp.where(active, s.lane_qidx, cap)
-    dir_vals = jnp.where(live, jnp.where(topdown, 0, 1), -1)
+    # int32 up front: under x64 a weak-int64 scatter value into the
+    # int32 trace will become an error in future jax
+    dir_vals = jnp.where(live, jnp.where(topdown, 0, 1),
+                         -1).astype(jnp.int32)
     trace_dir = s.trace_dir.at[tr_row, tr_col].set(dir_vals)
     trace_vf = s.trace_vf.at[tr_row, tr_col].set(v_f)
     trace_ef = s.trace_ef.at[tr_row, tr_col].set(e_f)
@@ -242,7 +249,7 @@ def _dist_pipeline_body(g_loc: CSRGraph, base, s: DistPipelineState,
 
     # --- frontier exchange: place local rows, OR-merge across devices ----
     placed = jax.lax.dynamic_update_slice(
-        jnp.zeros((n, w), jnp.uint32), new_loc, (base, 0))
+        jnp.zeros((n, w), new_loc.dtype), new_loc, (base, col0))
     new_full = allreduce_or(placed, axes)
 
     new_loc_b = unpack_lanes(new_loc, lanes)
@@ -257,7 +264,8 @@ def _dist_pipeline_body(g_loc: CSRGraph, base, s: DistPipelineState,
 
     deg = g_loc.deg.astype(jnp.int32)[:, None]
     edges_l = jax.lax.psum(
-        jnp.sum(jnp.where(visited2_b, deg, 0), axis=0), axes)
+        jnp.sum(jnp.where(visited2_b, deg, 0), axis=0,
+                dtype=jnp.int32), axes)
     fcol = jnp.where(finished, s.lane_qidx, cap)
     out_depth = s.out_depth.at[:, fcol].set(depth2)
     out_edges = s.out_edges.at[fcol].set(edges_l)
@@ -372,7 +380,8 @@ def _derive_parents_dist(row_ptr_s, col_s, srcloc_s, depth_full, roots, *,
         row_ptr, col, src_loc = row_ptr[0], col[0], src_loc[0]
         base = _flat_axis_index(axes, dict(mesh.shape)) * n_loc
         depth_loc = jax.lax.dynamic_slice(
-            depth_full, (base, 0), (n_loc, num_roots))
+            depth_full, (base, jnp.zeros((), jnp.asarray(base).dtype)),
+            (n_loc, num_roots))
         colc = jnp.clip(col, 0, n - 1)
         valid = (col < n)[:, None]       # pad slots carry the sentinel n
         outs = []

@@ -67,7 +67,7 @@ from repro.core.packed import (LANE_WORD_BITS, MODES, adaptive_lane_pool,
                                depth_slice_words, dispatch_packed_step,
                                lane_counters, num_lane_words, pack_lanes,
                                queue_claims, segment_or,
-                               select_direction, unpack_lanes)
+                               select_direction, unpack_lanes, word_dtype)
 
 __all__ = [
     "LANE_WORD_BITS", "MAX_LANES", "MODES", "MSBFSResult",
@@ -193,7 +193,8 @@ def msbfs(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",
             frontier=new, visited=s.visited | new, depth=depth2,
             topdown=topdown, layer=i + 1,
             trace_dir=s.trace_dir.at[i].set(
-                jnp.where(live, jnp.where(topdown, 0, 1), -1)),
+                jnp.where(live, jnp.where(topdown, 0, 1),
+                          -1).astype(jnp.int32)),
             trace_vf=s.trace_vf.at[i].set(jnp.where(live, v_f, 0)),
             trace_ef=s.trace_ef.at[i].set(jnp.where(live, e_f, 0)),
             trace_eu=s.trace_eu.at[i].set(jnp.where(live, e_u, 0)),
@@ -213,7 +214,8 @@ def msbfs(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",
 
     visited_b = unpack_lanes(s.visited, num_roots)
     deg = g.deg.astype(jnp.int32)[:, None]
-    edges = jnp.sum(jnp.where(visited_b, deg, 0), axis=0)
+    edges = jnp.sum(jnp.where(visited_b, deg, 0), axis=0,
+                    dtype=jnp.int32)
     # a cap-terminated lane ran exactly MAX_TRACE layers (the serial
     # controller's loop bound and the pipelined engine's flush agree)
     num_layers = jnp.minimum(jnp.max(s.depth, axis=0) + 1, MAX_TRACE)
@@ -286,8 +288,8 @@ def msbfs_engine_init(g: CSRGraph, capacity: int,
     w = num_lane_words(lanes)
     cap = capacity
     return PipelineState(
-        frontier=jnp.zeros((n, w), jnp.uint32),
-        visited=jnp.zeros((n, w), jnp.uint32),
+        frontier=jnp.zeros((n, w), word_dtype()),
+        visited=jnp.zeros((n, w), word_dtype()),
         depth=jnp.full((n, lanes), -1, jnp.int32),
         lane_layer=jnp.zeros((lanes,), jnp.int32),
         lane_qidx=jnp.full((lanes,), cap, jnp.int32),
@@ -387,7 +389,10 @@ def _pipeline_body(g: CSRGraph, s: PipelineState, mode: str, alpha: float,
     # of which lane served it or when it was claimed
     tr_row = jnp.clip(s.lane_layer, 0, MAX_TRACE - 1)
     tr_col = jnp.where(active, s.lane_qidx, cap)
-    dir_vals = jnp.where(live, jnp.where(topdown, 0, 1), -1)
+    # int32 up front: under x64 a weak-int64 scatter value into the
+    # int32 trace will become an error in future jax
+    dir_vals = jnp.where(live, jnp.where(topdown, 0, 1),
+                         -1).astype(jnp.int32)
     trace_dir = s.trace_dir.at[tr_row, tr_col].set(dir_vals)
     trace_vf = s.trace_vf.at[tr_row, tr_col].set(v_f)
     trace_ef = s.trace_ef.at[tr_row, tr_col].set(e_f)
@@ -407,7 +412,8 @@ def _pipeline_body(g: CSRGraph, s: PipelineState, mode: str, alpha: float,
     finished = active & (~new_b.any(axis=0) | (lane_layer2 >= MAX_TRACE))
 
     deg = g.deg.astype(jnp.int32)[:, None]
-    edges_l = jnp.sum(jnp.where(visited2_b, deg, 0), axis=0)
+    edges_l = jnp.sum(jnp.where(visited2_b, deg, 0), axis=0,
+                      dtype=jnp.int32)
     fcol = jnp.where(finished, s.lane_qidx, cap)
     out_depth = s.out_depth.at[:, fcol].set(depth2)
     out_edges = s.out_edges.at[fcol].set(edges_l)

@@ -30,29 +30,40 @@ the piece to share with the distributed partition.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.csr import CSRGraph
 from repro.core.hybrid import switch_direction
 
-LANE_WORD_BITS = 32
+# the single knob of the ROADMAP uint64-lane rung: settable per process
+# via the LANE_WORD_BITS env var (the CI uint64 tier-1 leg runs the whole
+# engine stack under LANE_WORD_BITS=64 + JAX_ENABLE_X64=1), or swapped at
+# runtime by tests (tests/test_msbfs.py lane_word_bits context manager)
+LANE_WORD_BITS = int(os.environ.get("LANE_WORD_BITS", "32"))
+if LANE_WORD_BITS not in (32, 64):
+    raise ValueError(
+        f"LANE_WORD_BITS must be 32 or 64, got {LANE_WORD_BITS}")
 
 MODES = ("hybrid", "topdown", "bottomup")
 
 
 def word_dtype():
-    """Lane-word dtype for the current ``LANE_WORD_BITS``. The ROADMAP
-    uint64 rung flips the constant to 64; everything downstream derives
-    the dtype from here. 64-bit words hard-require jax x64: without it
-    jnp silently materializes uint64 as uint32 and lanes 32-63 of every
-    word would vanish without an error — fail loudly instead."""
+    """Lane-word dtype for the current ``LANE_WORD_BITS``. Everything
+    downstream derives the dtype from here. 64-bit words hard-require jax
+    x64: without it jnp silently materializes uint64 as uint32 and lanes
+    32-63 of every word would vanish without an error — fail loudly,
+    naming the fix."""
     if LANE_WORD_BITS == 64:
         if not jax.config.jax_enable_x64:
             raise RuntimeError(
-                "LANE_WORD_BITS=64 requires jax x64 (enable "
-                "jax_enable_x64); without it uint64 lane words silently "
-                "downcast to uint32 and half the lanes are lost")
+                'LANE_WORD_BITS=64 requires jax x64 — run with '
+                'jax.config.update("jax_enable_x64", True) (or set '
+                'JAX_ENABLE_X64=1) before any jax call; without it '
+                'uint64 lane words silently downcast to uint32 and '
+                'lanes 32-63 of every word are lost')
         return jnp.uint64
     return jnp.uint32
 
@@ -192,9 +203,11 @@ def lane_counters(g: CSRGraph, frontier_b: jnp.ndarray,
     """Per-lane (e_f, v_f, e_u) from unpacked bool[n, R] state. Under
     sharding these are per-device partials the caller psums."""
     deg = g.deg.astype(jnp.int32)[:, None]
-    e_f = jnp.sum(jnp.where(frontier_b, deg, 0), axis=0)
+    # int32 accumulators even under x64 (the u64 lane-word rung): the
+    # trace buffers are int32 and m < 2**31 is enforced at build time
+    e_f = jnp.sum(jnp.where(frontier_b, deg, 0), axis=0, dtype=jnp.int32)
     v_f = jnp.sum(frontier_b, axis=0, dtype=jnp.int32)
-    e_u = jnp.sum(jnp.where(visited_b, 0, deg), axis=0)
+    e_u = jnp.sum(jnp.where(visited_b, 0, deg), axis=0, dtype=jnp.int32)
     return e_f, v_f, e_u
 
 

@@ -13,9 +13,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.csr import CSRGraph, from_edges
+from repro.core.csr import (CSRGraph, WeightedCSRGraph, from_edges,
+                            from_weighted_edges)
 
 GRAPH500_ABCD = (0.57, 0.19, 0.19, 0.05)
+
+# Graph500 SSSP-kernel convention: uniform edge weights in (0, 1]
+WEIGHT_RANGE = (0.0, 1.0)
 
 
 def rmat_edges(scale: int, edgefactor: int, seed: int = 0,
@@ -50,6 +54,49 @@ def rmat_graph(scale: int, edgefactor: int, seed: int = 0,
     """Generate a symmetrised CSR Graph500 graph."""
     src, dst, n = rmat_edges(scale, edgefactor, seed, abcd)
     return from_edges(src, dst, n, symmetrize=True, drop_self_loops=True)
+
+
+def edge_weights(m: int, seed: int = 0,
+                 weight_range: tuple[float, float] = WEIGHT_RANGE,
+                 ) -> np.ndarray:
+    """One uniform weight per directed input edge (the Graph500 SSSP
+    kernel's weight model). Weights are drawn from a seed stream that is
+    independent of the edge sampler's, so (scale, seed) still pins the
+    unweighted topology exactly."""
+    lo, hi = weight_range
+    if not 0 <= lo <= hi:
+        raise ValueError(f"need 0 <= lo <= hi, got weight_range "
+                         f"({lo}, {hi})")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0x5557]))
+    return rng.uniform(lo, hi, size=m)
+
+
+def rmat_weighted_graph(scale: int, edgefactor: int, seed: int = 0,
+                        abcd: tuple[float, float, float, float]
+                        = GRAPH500_ABCD,
+                        weight_range: tuple[float, float] = WEIGHT_RANGE,
+                        ) -> WeightedCSRGraph:
+    """``rmat_graph`` + per-edge weights generated alongside the Kronecker
+    edges: same (scale, seed) topology, each undirected edge carrying one
+    uniform weight both ways (``WeightedCSRGraph.csr`` is bit-identical to
+    the ``rmat_graph`` CSR)."""
+    src, dst, n = rmat_edges(scale, edgefactor, seed, abcd)
+    w = edge_weights(len(src), seed, weight_range)
+    return from_weighted_edges(src, dst, w, n, symmetrize=True,
+                               drop_self_loops=True)
+
+
+def uniform_random_weighted_graph(n: int, m: int, seed: int = 0,
+                                  weight_range: tuple[float, float]
+                                  = WEIGHT_RANGE) -> WeightedCSRGraph:
+    """Weighted G(n, m) analog of ``uniform_random_graph`` — the SSSP
+    property tests' graph model."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    w = edge_weights(m, seed, weight_range)
+    return from_weighted_edges(src, dst, w, n, symmetrize=True,
+                               drop_self_loops=True)
 
 
 def uniform_random_graph(n: int, m: int, seed: int = 0) -> CSRGraph:

@@ -5,8 +5,8 @@
 
 Callers import from here (``from repro.kernels import msbfs_probe``)
 instead of deep module paths — the op-level wrappers, their Pallas
-kernels, and the pure-jnp references are all re-exported. Two op names
-(``bottom_up_probe``, ``msbfs_probe``) intentionally shadow their
+kernels, and the pure-jnp references are all re-exported. Three op names
+(``bottom_up_probe``, ``msbfs_probe``, ``semiring_relax``) intentionally shadow their
 subpackages: the function bindings below land after the import system
 binds the submodules, and deep *from*-imports
 (``from repro.kernels.msbfs_probe.ops import msbfs_probe``) resolve
@@ -30,6 +30,9 @@ from repro.kernels.ell_spmm.ref import ell_spmm_ref
 from repro.kernels.msbfs_probe.kernel import msbfs_probe_pallas
 from repro.kernels.msbfs_probe.ops import msbfs_probe
 from repro.kernels.msbfs_probe.ref import msbfs_probe_ref
+from repro.kernels.semiring_relax.kernel import semiring_relax_pallas
+from repro.kernels.semiring_relax.ops import semiring_relax
+from repro.kernels.semiring_relax.ref import semiring_relax_ref
 from repro.kernels.topdown_scan.kernel import topdown_scan_pallas
 from repro.kernels.topdown_scan.ops import topdown_step_pallas
 from repro.kernels.topdown_scan.ref import topdown_scan_ref
@@ -37,6 +40,7 @@ from repro.kernels.topdown_scan.ref import topdown_scan_ref
 __all__ = [
     "bottom_up_probe", "bottom_up_probe_pallas", "bottom_up_probe_ref",
     "ell_spmm_pallas", "ell_spmm_ref", "interpret_default", "msbfs_probe",
-    "msbfs_probe_pallas", "msbfs_probe_ref", "spmm_aggregate",
+    "msbfs_probe_pallas", "msbfs_probe_ref", "semiring_relax",
+    "semiring_relax_pallas", "semiring_relax_ref", "spmm_aggregate",
     "topdown_scan_pallas", "topdown_scan_ref", "topdown_step_pallas",
 ]

@@ -21,5 +21,6 @@ def msbfs_probe_ref(starts, deg, need_words, col_idx, frontier_words,
         live = ((need_words & ~acc) != 0) & (pos < deg)[:, None]
         idx = jnp.clip(starts + pos, 0, m - 1)
         vadj = col_idx[idx]
-        acc = acc | jnp.where(live, frontier_words[vadj], jnp.uint32(0))
+        acc = acc | jnp.where(live, frontier_words[vadj],
+                              jnp.zeros((), frontier_words.dtype))
     return acc[:, 0] if flat else acc

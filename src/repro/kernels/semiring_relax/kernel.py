@@ -1,0 +1,114 @@
+"""Pallas TPU kernel for the masked min-plus (tropical) gather-relax.
+
+The MS-BFS probe (``msbfs_probe``) gathers uint lane *words* and
+OR-accumulates; this kernel is the same MAX_POS gather shape carried to
+the tropical semiring — each vertex gathers its first ``max_pos``
+neighbours' float lane values, adds the edge weight, and min-accumulates:
+
+  idx  = starts + pos                          # pos = 0..max_pos-1
+  vadj = col_idx[idx]                          # LoadAdj: masked gather
+  acc  = min(acc, vals_plane[vadj] + w[idx])   # min-plus, where pos < deg
+
+Masking is by VALUE, not by selector words: inactive source vertices hold
+``inf`` lane values and phase-excluded edges hold ``inf`` weights (both
+are absorbing under min-plus), so one kernel serves every delta-stepping
+phase (light iteration, heavy settle) and any future tropical workload.
+There is NO retirement test — unlike the boolean probe, a later neighbour
+can always improve a served minimum — so the unroll runs all ``max_pos``
+rounds; rows deeper than ``max_pos`` are finished by the caller's
+segmented-scan fallback (``traversal.semiring.tropical_relax``).
+
+Grid/VMEM layout mirrors ``msbfs_probe``: the dense lane count L is the
+outer grid dimension (one float value plane per lane, resident across its
+vertex tiles), vertex-tile operands stream via BlockSpec, and ``col_idx``
+/ ``weights`` are held whole in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANES, SUBLANES, TILE, cdiv
+
+
+def _semiring_relax_kernel(starts_ref, deg_ref, col_ref, w_ref, vp_ref,
+                           acc_out, *, max_pos: int, m: int):
+    starts = starts_ref[...]
+    deg = deg_ref[...]
+    col = col_ref[...]          # local edge slab, VMEM-resident
+    w = w_ref[...]              # per-edge weights alongside it
+    vp = vp_ref[0]              # this lane's value per vertex
+
+    acc = jnp.full(starts.shape, jnp.inf, jnp.float32)
+    for pos in range(max_pos):  # static unroll — the paper's MAX_POS loop
+        live = pos < deg
+        idx = jnp.clip(starts + pos, 0, m - 1)
+        vadj = jnp.take(col, idx, axis=0)                  # LoadAdj gather
+        v = jnp.take(vp, vadj, axis=0)                     # lane-value gather
+        we = jnp.take(w, idx, axis=0)
+        acc = jnp.minimum(acc, jnp.where(live, v + we, jnp.inf))
+
+    acc_out[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("max_pos", "interpret"))
+def semiring_relax_pallas(starts: jnp.ndarray, deg: jnp.ndarray,
+                          col_idx: jnp.ndarray, weights: jnp.ndarray,
+                          vals: jnp.ndarray, max_pos: int = 8,
+                          interpret: bool = True):
+    """Returns acc — min over the first ``max_pos`` neighbours of
+    ``vals[neighbour] + weight``, per vertex and lane (``inf`` where no
+    neighbour relaxes).
+
+    Shapes: starts/deg int32[n]; col_idx int32[m]; weights float32[m];
+    vals float32[nf, L] (float32[nf] accepted as L=1 and returned flat)
+    with nf >= n — the distributed shape probes a LOCAL row block against
+    full-range values, ``col_idx`` holding global ids. Row counts are
+    padded to a multiple of 1024 internally; L is a static grid dimension.
+    """
+    flat = vals.ndim == 1
+    if flat:
+        vals = vals[:, None]
+    n = starts.shape[0]
+    nf, lanes = vals.shape
+    m = col_idx.shape[0]
+    n_pad = cdiv(n, TILE) * TILE
+    pad = n_pad - n
+    nf_pad = cdiv(nf, TILE) * TILE
+
+    def pad1(x, value=0):
+        return jnp.pad(x, (0, pad), constant_values=value) if pad else x
+
+    starts2 = pad1(starts).reshape(-1, SUBLANES, LANES)
+    deg2 = pad1(deg).reshape(-1, SUBLANES, LANES)
+    # plane-major [L, nf_pad] so the lane grid index selects one value plane
+    vp = jnp.pad(vals, ((0, nf_pad - nf), (0, 0)),
+                 constant_values=jnp.inf).T
+    # padded rows carry inf values: a clipped/sentinel vadj gather reads
+    # them as non-improving, never as a spurious zero-distance source
+    w = weights.astype(jnp.float32)
+
+    tiles = n_pad // TILE
+    grid = (lanes, tiles)
+    vert_spec = pl.BlockSpec((1, SUBLANES, LANES), lambda pl_, i: (i, 0, 0))
+    full_col = pl.BlockSpec(col_idx.shape, lambda pl_, i: (0,))
+    full_w = pl.BlockSpec(w.shape, lambda pl_, i: (0,))
+    plane_vp = pl.BlockSpec((1, nf_pad), lambda pl_, i: (pl_, 0))
+    plane_tile_out = pl.BlockSpec((1, 1, SUBLANES, LANES),
+                                  lambda pl_, i: (pl_, i, 0, 0))
+
+    acc = pl.pallas_call(
+        functools.partial(_semiring_relax_kernel, max_pos=max_pos, m=m),
+        grid=grid,
+        in_specs=[vert_spec, vert_spec, full_col, full_w, plane_vp],
+        out_specs=plane_tile_out,
+        out_shape=jax.ShapeDtypeStruct((lanes, tiles, SUBLANES, LANES),
+                                       jnp.float32),
+        interpret=interpret,
+    )(starts2, deg2, col_idx, w, vp)
+
+    acc = acc.reshape(lanes, n_pad)[:, :n].T
+    return acc[:, 0] if flat else acc

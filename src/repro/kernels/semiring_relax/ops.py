@@ -1,0 +1,21 @@
+"""Jitted public wrapper for the semiring_relax kernel.
+
+``semiring_relax`` is what ``repro.traversal.semiring.tropical_relax``
+calls when ``impl='pallas'``: given per-edge weights and dense float lane
+values (inf = inactive) it returns the min-plus accumulator over each
+row's first ``max_pos`` neighbours; the caller folds in the deeper-row
+residue via the segmented-scan fallback. The lane count L is a kernel
+grid dimension — ONE launch serves every value plane.
+"""
+from __future__ import annotations
+
+from repro.kernels.common import interpret_default
+from repro.kernels.semiring_relax.kernel import semiring_relax_pallas
+
+
+def semiring_relax(row_ptr, col_idx, weights, vals, max_pos: int = 8):
+    starts = row_ptr[:-1]
+    deg = row_ptr[1:] - row_ptr[:-1]
+    return semiring_relax_pallas(starts, deg, col_idx, weights, vals,
+                                 max_pos=max_pos,
+                                 interpret=interpret_default())

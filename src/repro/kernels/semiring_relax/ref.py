@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the semiring_relax kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+
+def semiring_relax_ref(starts, deg, col_idx, weights, vals,
+                       max_pos: int = 8):
+    """Identical math to the kernel, plain jnp: per row, min-plus over the
+    first ``max_pos`` neighbours' lane values (inf where nothing relaxes).
+    Accepts float32[nf, L] value planes (or float32[nf] as L=1);
+    ``vals`` may have MORE rows than ``starts`` (distributed local-block
+    relax against full-range values)."""
+    flat = vals.ndim == 1
+    if flat:
+        vals = vals[:, None]
+    m = col_idx.shape[0]
+    w = weights.astype(jnp.float32)
+    acc = jnp.full((starts.shape[0], vals.shape[1]), INF, jnp.float32)
+    for pos in range(max_pos):
+        live = (pos < deg)[:, None]
+        idx = jnp.clip(starts + pos, 0, m - 1)
+        vadj = col_idx[idx]
+        cand = vals[vadj] + w[idx][:, None]
+        acc = jnp.minimum(acc, jnp.where(live, cand, INF))
+    return acc[:, 0] if flat else acc

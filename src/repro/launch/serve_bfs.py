@@ -14,7 +14,16 @@ type that reduces to lane traversals rides the same bit-lane pool:
 * ``reach``     — one root + target vertex, answer = hop distance;
 * ``closeness`` — a sampled-source centrality estimate: S roots enqueued
                   as one request, answered when ALL S lanes flush, the
-                  estimator is ``analytics.closeness.closeness_from_depths``.
+                  estimator is ``analytics.closeness.closeness_from_depths``;
+* ``sssp``      — one source, WEIGHTED shortest paths: the request rides a
+                  dense tropical lane of the delta-stepping engine
+                  (``repro.traversal.sssp``) stepped side by side with the
+                  packed engine in the same loop — the two engines share
+                  the arrival schedule and the layer clock, so sojourn
+                  stats stay comparable across boolean and weighted
+                  queries. Needs a weighted graph (the harness generates
+                  ``rmat_weighted_graph``; plain CSR still works for
+                  boolean-only mixes).
 
 Each enqueued request is tagged with its query type; the loop reports
 per-type sojourn (arrival layer -> answer layer) and latency statistics on
@@ -22,12 +31,13 @@ top of the aggregate TEPS / occupancy numbers, so a mixed workload shows
 which query class is starving.
 
   PYTHONPATH=src python -m repro.launch.serve_bfs --scale 12 --lanes 32 \
-      --queries 64 --mix bfs:4,khop:2,reach:1,closeness:1 \
-      --burst 4 --every 2 [--validate] [--ndev 4]
+      --queries 64 --mix bfs:4,khop:2,reach:1,closeness:1,sssp:2 \
+      --burst 4 --every 2 [--validate] [--ndev 4] [--delta 0.05]
 
 ``--lanes 0`` sizes the bit-lane pool adaptively; latency is measured in
 engine *layers* (the deterministic unit of work), so runs are
-reproducible.
+reproducible. Aggregate TEPS counts the packed engine's traversed edges
+only (weighted relaxation work is reported as ``sssp_steps``).
 """
 from __future__ import annotations
 
@@ -39,14 +49,15 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
+from repro.core.csr import WeightedCSRGraph
 from repro.core.hybrid import ALPHA_DEFAULT, BETA_DEFAULT
 from repro.core.msbfs import (adaptive_lane_pool, msbfs_engine_enqueue,
                               msbfs_engine_idle, msbfs_engine_init,
                               msbfs_engine_result, msbfs_engine_step)
-from repro.graph.generator import rmat_graph, sample_roots
+from repro.graph.generator import rmat_weighted_graph, sample_roots
 from repro.graph.validate import validate_bfs_tree
 
-QUERY_KINDS = ("bfs", "khop", "reach", "closeness")
+QUERY_KINDS = ("bfs", "khop", "reach", "closeness", "sssp")
 
 
 @dataclass
@@ -106,6 +117,9 @@ def make_requests(g, num: int, mix: str = "bfs", seed: int = 0,
             s = np.sort(rng.choice(g.n, size=closeness_sources,
                                    replace=False)).astype(np.int32)
             out.append(Request("closeness", s))
+        elif kind == "sssp":
+            out.append(Request(
+                "sssp", np.asarray([rng.choice(pool)], np.int32)))
         elif kind == "reach":
             out.append(Request(
                 "reach", np.asarray([rng.choice(pool)], np.int32),
@@ -155,13 +169,26 @@ def _sojourn_stats(sojourn: np.ndarray) -> dict:
         p95=float(np.percentile(sojourn, 95)), max=int(sojourn.max()))
 
 
-def _answers(g, requests: list[Request], depth: np.ndarray) -> dict:
+def _answers(g, requests: list[Request], depth: np.ndarray,
+             sssp_res=None) -> dict:
     """Post-process each request's lanes into its typed answer; returns a
-    small per-type summary for the stats dict."""
+    small per-type summary for the stats dict. Boolean requests index the
+    packed engine's ``depth`` columns, sssp requests the tropical
+    engine's result columns (each engine numbers its own slots)."""
     from repro.analytics.closeness import closeness_from_depths
     n = g.n
     summary: dict[str, dict] = {}
     for req in requests:
+        if req.qtype == "sssp":
+            d = np.asarray(sssp_res.dist)[:, req.slots]
+            fin = np.isfinite(d[:, 0])
+            req.answer = dict(
+                reached=int(fin.sum()),
+                max_dist=float(d[fin, 0].max()) if fin.any() else 0.0,
+                # a capped lane's distances are partial — the answer says so
+                truncated=bool(
+                    np.asarray(sssp_res.truncated)[req.slots].any()))
+            continue
         d = depth[:, req.slots]
         if req.qtype == "bfs":
             req.answer = dict(reached=int((d[:, 0] >= 0).sum()),
@@ -188,84 +215,159 @@ def _answers(g, requests: list[Request], depth: np.ndarray) -> dict:
     clo = [r for r in requests if r.qtype == "closeness"]
     summary["closeness"] = dict(top_vertices=sorted(
         {r.answer["top_vertex"] for r in clo}))
+    summary["sssp"] = dict(mean_reached=float(np.mean(
+        [r.answer["reached"] for r in requests if r.qtype == "sssp"] or [0])))
     return {k: v for k, v in summary.items()
             if any(r.qtype == k for r in requests)}
 
 
 def serve(g, requests: list[Request], lanes: int, burst: int, every: int,
           mode: str = "hybrid", probe_impl: str = "xla",
-          validate: bool = False, ndev: int = 1) -> dict:
-    """Feed tagged ``requests`` to the engine ``burst`` requests at a time
-    every ``every`` layers; run until all are answered. Returns serving
-    statistics with per-query-type sojourn breakdowns. ``lanes=0`` picks
-    the pool width adaptively; ``ndev>1`` runs the sharded engine."""
+          validate: bool = False, ndev: int = 1,
+          delta: float | None = None) -> dict:
+    """Feed tagged ``requests`` to the engines ``burst`` requests at a
+    time every ``every`` layers; run until all are answered. Returns
+    serving statistics with per-query-type sojourn breakdowns.
+
+    Boolean requests (bfs/khop/reach/closeness) ride the packed MS-BFS
+    engine; ``sssp`` requests ride the delta-stepping tropical engine,
+    stepped in the SAME loop iteration so both share the arrival schedule
+    and the layer clock. ``lanes=0`` picks the packed pool width
+    adaptively; ``ndev>1`` shards the packed engine (sssp requests then
+    require ndev=1 — distributed SSSP is a ROADMAP rung); ``delta=None``
+    uses the weighted graph's default bucket width."""
+    wg = g if isinstance(g, WeightedCSRGraph) else None
+    if wg is not None:
+        g = wg.csr
     num_req = len(requests)
     if num_req < 1:
         raise ValueError("need at least one request")
     if burst < 1 or every < 1:
         raise ValueError(f"burst and every must be >= 1, "
                          f"got burst={burst} every={every}")
-    capacity = int(sum(r.roots.size for r in requests))
+    sssp_reqs = [r for r in requests if r.qtype == "sssp"]
+    if sssp_reqs and wg is None:
+        raise ValueError("sssp requests need a WeightedCSRGraph — "
+                         "generate the serving graph with "
+                         "rmat_weighted_graph")
+    if sssp_reqs and ndev > 1:
+        raise NotImplementedError(
+            "distributed SSSP (the 1-D partition rung) is not built yet "
+            "— serve sssp mixes with --ndev 1; see ROADMAP")
+    bool_cap = int(sum(r.roots.size for r in requests
+                       if r.qtype != "sssp"))
+    sssp_cap = int(sum(r.roots.size for r in sssp_reqs))
     if not lanes:
-        lanes = adaptive_lane_pool(capacity, g.n, g.m)
-    eng_init, eng_enqueue, eng_step, eng_idle, eng_result = _engine(
-        g, mode, probe_impl, ndev)
-    state = eng_init(capacity, lanes)
+        lanes = adaptive_lane_pool(max(bool_cap, 1), g.n, g.m)
+
+    state = sstate = None
+    if bool_cap:
+        eng_init, eng_enqueue, eng_step, eng_idle, eng_result = _engine(
+            g, mode, probe_impl, ndev)
+        state = eng_init(bool_cap, lanes)
+    if sssp_cap:
+        from repro.traversal.sssp import (DEFAULT_LANES, default_delta,
+                                          sssp_engine_enqueue,
+                                          sssp_engine_idle,
+                                          sssp_engine_init,
+                                          sssp_engine_result,
+                                          sssp_engine_step)
+        if delta is None:
+            delta = default_delta(wg)
+        sssp_lanes = max(1, min(lanes, sssp_cap, DEFAULT_LANES))
+        sstate = sssp_engine_init(wg, sssp_cap, sssp_lanes)
+
+        def sssp_step(s):
+            return sssp_engine_step(wg, s, float(delta), 8, probe_impl)
 
     arrival = np.full(num_req, -1, np.int64)   # layer the request arrived
     answered = np.full(num_req, -1, np.int64)  # layer it was fully answered
     occupancy = []
 
-    slot_hi = 0
+    slot_hi = {"bool": 0, "sssp": 0}           # per-engine slot numbering
 
-    def enqueue(s, lo, hi, layer):
-        nonlocal slot_hi
+    def enqueue(s, ss, lo, hi, layer):
         for req in requests[lo:hi]:
-            req.slots = slice(slot_hi, slot_hi + req.roots.size)
-            slot_hi += req.roots.size
-            s = eng_enqueue(s, req.roots)
+            kind = "sssp" if req.qtype == "sssp" else "bool"
+            req.slots = slice(slot_hi[kind], slot_hi[kind] + req.roots.size)
+            slot_hi[kind] += req.roots.size
+            if kind == "sssp":
+                ss = sssp_engine_enqueue(ss, req.roots)
+            else:
+                s = eng_enqueue(s, req.roots)
         arrival[lo:hi] = layer
-        return s
+        return s, ss
 
-    # warm the step executable on a throwaway state so the serving window
+    # warm the step executables on throwaway states so the serving window
     # measures traversal, not one-time XLA compilation (same discipline as
     # the graph500 harness's warmup)
-    jax.block_until_ready(
-        eng_step(eng_enqueue(state, requests[0].roots[:1])).out_depth)
+    if bool_cap:
+        first = next(r for r in requests if r.qtype != "sssp")
+        jax.block_until_ready(
+            eng_step(eng_enqueue(state, first.roots[:1])).out_depth)
+    if sssp_cap:
+        jax.block_until_ready(sssp_step(
+            sssp_engine_enqueue(sstate, sssp_reqs[0].roots[:1])).out_dist)
 
-    state = enqueue(state, 0, min(burst, num_req), 0)
+    state, sstate = enqueue(state, sstate, 0, min(burst, num_req), 0)
     fed = min(burst, num_req)
     layer = 0
+
+    def all_idle():
+        return ((state is None or eng_idle(state))
+                and (sstate is None or sssp_engine_idle(sstate)))
+
     t0 = time.perf_counter()
-    while fed < num_req or not eng_idle(state):
-        state = eng_step(state)
+    while fed < num_req or not all_idle():
+        if state is not None and not eng_idle(state):
+            state = eng_step(state)
+        if sstate is not None and not sssp_engine_idle(sstate):
+            sstate = sssp_step(sstate)
         layer += 1
-        occupancy.append(
-            int(np.sum(np.asarray(state.lane_qidx) < capacity)))
-        done_slots = np.asarray(state.out_layers[:capacity]) > 0
+        occ = 0
+        if state is not None:
+            occ += int(np.sum(np.asarray(state.lane_qidx) < bool_cap))
+        if sstate is not None:
+            occ += int(np.sum(np.asarray(sstate.lane_qidx) < sssp_cap))
+        occupancy.append(occ)
+        done_bool = (np.asarray(state.out_layers[:bool_cap]) > 0
+                     if state is not None else None)
+        done_sssp = (np.asarray(sstate.out_steps[:sssp_cap]) > 0
+                     if sstate is not None else None)
         for i, req in enumerate(requests[:fed]):
-            if answered[i] < 0 and done_slots[req.slots].all():
+            done = done_sssp if req.qtype == "sssp" else done_bool
+            if answered[i] < 0 and done[req.slots].all():
                 answered[i] = layer   # a request answers when EVERY lane has
         if layer % every == 0 and fed < num_req:
             nxt = min(fed + burst, num_req)
-            state = enqueue(state, fed, nxt, layer)
+            state, sstate = enqueue(state, sstate, fed, nxt, layer)
             fed = nxt
-    jax.block_until_ready(state.out_depth)
+    if state is not None:
+        jax.block_until_ready(state.out_depth)
+    if sstate is not None:
+        jax.block_until_ready(sstate.out_dist)
     wall = time.perf_counter() - t0
 
     # parents cost an O(m) scatter-min pass per lane chunk and only the
     # validator reads them — the answers post-processing is depth-only
-    out = eng_result(state, validate)
-    depth = np.asarray(out.depth)
-    if validate:
+    depth = sssp_res = None
+    edges = 0
+    if state is not None:
+        out = eng_result(state, validate)
+        depth = np.asarray(out.depth)
+        edges = int(np.asarray(out.edges_traversed).sum()) // 2
+    if sstate is not None:
+        sssp_res = sssp_engine_result(sstate)
+    if validate and state is not None:
         from repro.core.csr import to_numpy_adj
         rp, ci = to_numpy_adj(g)
         parent = np.asarray(out.parent)
-        col = 0
         for req in requests:
-            for r in req.roots:   # every lane is a BFS tree, whatever the tag
-                validate_bfs_tree(rp, ci, parent[:, col], int(r))
-                col += 1
+            if req.qtype == "sssp":   # tropical lanes carry no BFS tree
+                continue
+            for j, r in enumerate(req.roots):  # every boolean lane is a
+                validate_bfs_tree(                 # BFS tree, whatever the tag
+                    rp, ci, parent[:, req.slots][:, j], int(r))
 
     sojourn = answered - arrival
     qtypes = np.asarray([r.qtype for r in requests])
@@ -275,17 +377,20 @@ def serve(g, requests: list[Request], lanes: int, burst: int, every: int,
                                  if r.qtype == kind)),
                    sojourn_layers=_sojourn_stats(sojourn[qtypes == kind]))
         for kind in QUERY_KINDS if (qtypes == kind).any()}
-    edges = int(np.asarray(out.edges_traversed).sum()) // 2
-    return dict(
-        requests=num_req, total_lanes=capacity, lanes=lanes, ndev=ndev,
-        layers=layer, wall_s=round(wall, 4),
+    stats = dict(
+        requests=num_req, total_lanes=bool_cap + sssp_cap, lanes=lanes,
+        ndev=ndev, layers=layer, wall_s=round(wall, 4),
         sojourn_layers=_sojourn_stats(sojourn),
         per_type=per_type,
-        answers=_answers(g, requests, depth),
+        answers=_answers(g, requests, depth, sssp_res),
         mean_lane_occupancy=float(np.mean(occupancy)),
         aggregate_mteps=round(edges / wall / 1e6, 2) if wall > 0 else 0.0,
-        validated=bool(validate),
+        validated=bool(validate and state is not None),
     )
+    if sstate is not None:
+        stats["delta"] = float(delta)
+        stats["sssp_steps"] = int(sstate.sweep_steps)
+    return stats
 
 
 def main():
@@ -302,7 +407,10 @@ def main():
                          "--closeness-sources lanes)")
     ap.add_argument("--mix", default="bfs",
                     help="workload mix, e.g. bfs:4,khop:2,reach:1,"
-                         "closeness:1 (weights optional)")
+                         "closeness:1,sssp:1 (weights optional)")
+    ap.add_argument("--delta", type=float, default=None,
+                    help="delta-stepping bucket width for sssp requests "
+                         "(default: the graph's default_delta)")
     ap.add_argument("--khop-k", type=int, default=2)
     ap.add_argument("--closeness-sources", type=int, default=8,
                     help="sampled sources (lanes) per closeness request")
@@ -317,13 +425,15 @@ def main():
     ap.add_argument("--validate", action="store_true")
     args = ap.parse_args()
 
-    g = rmat_graph(args.scale, args.edgefactor, args.seed)
+    # weights always ride along: the CSR is bit-identical to rmat_graph's,
+    # boolean-only mixes simply never read them
+    g = rmat_weighted_graph(args.scale, args.edgefactor, args.seed)
     requests = make_requests(g, args.queries, mix=args.mix, seed=args.seed,
                              khop_k=args.khop_k,
                              closeness_sources=args.closeness_sources)
     stats = serve(g, requests, args.lanes, args.burst, args.every,
                   mode=args.mode, probe_impl=args.probe_impl,
-                  validate=args.validate, ndev=args.ndev)
+                  validate=args.validate, ndev=args.ndev, delta=args.delta)
     print(json.dumps(stats, indent=2))
 
 

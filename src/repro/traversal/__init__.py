@@ -1,0 +1,40 @@
+"""Weighted semiring traversal — SSSP lanes on the packed-engine pattern.
+
+The MS-BFS engines instantiate ONE semiring (boolean OR/AND over packed
+lane words); this package generalizes the step to arbitrary semirings
+(SlimSell; Buluc & Madduri's masked-SpMV formulation) and builds the
+first weighted workload family on top:
+
+* ``semiring``  — the ``Semiring`` abstraction (boolean / tropical
+  min-plus / plus-times), the generalized segmented reduction, the
+  lane-batched semiring SpMV, and the masked tropical gather-relax
+  (XLA scan or the ``repro.kernels.semiring_relax`` Pallas kernel);
+* ``sssp``      — bucketed delta-stepping with multiple sources as dense
+  float lanes streamed through the pipelined root-queue pattern
+  (light/heavy bucket phases standing where alpha/beta direction
+  switches stand in MS-BFS);
+* ``ref``       — host NumPy Dijkstra oracle for the property suites.
+
+Downstream: ``repro.analytics`` serves ``SSSPQuery`` /
+``WeightedClosenessQuery`` over this engine, and
+``repro.launch.serve_bfs`` mixes ``sssp``-tagged requests into its
+serving loop.
+"""
+from repro.traversal.ref import dijkstra_reference, to_numpy_weighted
+from repro.traversal.semiring import (BOOLEAN, PLUS_TIMES, SEMIRINGS,
+                                      Semiring, TROPICAL, segment_reduce,
+                                      semiring_spmv, tropical_relax)
+from repro.traversal.sssp import (DEFAULT_LANES, MAX_SSSP_STEPS, SSSPResult,
+                                  default_delta, sssp_engine_drain,
+                                  sssp_engine_enqueue, sssp_engine_idle,
+                                  sssp_engine_init, sssp_engine_result,
+                                  sssp_engine_step, sssp_pipelined)
+
+__all__ = [
+    "BOOLEAN", "DEFAULT_LANES", "MAX_SSSP_STEPS", "PLUS_TIMES", "SEMIRINGS",
+    "SSSPResult", "Semiring", "TROPICAL", "default_delta",
+    "dijkstra_reference", "segment_reduce", "semiring_spmv",
+    "sssp_engine_drain", "sssp_engine_enqueue", "sssp_engine_idle",
+    "sssp_engine_init", "sssp_engine_result", "sssp_engine_step",
+    "sssp_pipelined", "to_numpy_weighted", "tropical_relax",
+]

@@ -1,0 +1,36 @@
+"""Host-side NumPy oracles for the weighted traversal subsystem."""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+
+def dijkstra_reference(row_ptr: np.ndarray, col_idx: np.ndarray,
+                       weights: np.ndarray, root: int) -> np.ndarray:
+    """Textbook binary-heap Dijkstra over a host CSR copy — the oracle the
+    delta-stepping engine is property-tested against. Returns float64[n]
+    distances with inf unreached; handles parallel edges, zero weights and
+    disconnected graphs (non-negative weights assumed, as enforced by
+    ``from_weighted_edges``)."""
+    n = len(row_ptr) - 1
+    dist = np.full(n, np.inf)
+    dist[root] = 0.0
+    heap = [(0.0, root)]
+    while heap:
+        d, u = heapq.heappop(heap)
+        if d > dist[u]:
+            continue                   # stale entry
+        for e in range(row_ptr[u], row_ptr[u + 1]):
+            v = col_idx[e]
+            nd = d + weights[e]
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(heap, (nd, v))
+    return dist
+
+
+def to_numpy_weighted(wg) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host copies of (row_ptr, col_idx, weights) for oracle use."""
+    return (np.asarray(wg.row_ptr), np.asarray(wg.col_idx),
+            np.asarray(wg.weights))

@@ -1,0 +1,358 @@
+"""Bucketed delta-stepping SSSP — dense tropical lanes, pipelined sources.
+
+Meyer & Sanders' delta-stepping, reformulated as lane-batched tropical
+semiring relaxations so it runs on the same machinery as the packed
+MS-BFS engines:
+
+* R concurrent single-source problems occupy R dense float32 *lanes*
+  (``dist[n, L]``, inf = unreached) — the numeric analog of the packed
+  bit lanes; sources stream through a fixed lane pool from a pending
+  queue, claimed/flushed/refilled mid-sweep with the SAME
+  ``packed.queue_claims`` rule as ``msbfs_pipelined``.
+* Each lane walks its buckets independently (``lane_bucket[l]``): bucket
+  ``b`` holds unsettled vertices with ``dist in [b*delta, (b+1)*delta)``.
+  Per engine step every lane is in one of two phases — the delta-stepping
+  analog of the per-lane alpha/beta direction switch:
+
+  - **light iteration**: relax light edges (w <= delta) from bucket
+    members whose distance changed since their last relaxation (the
+    request set, tracked by the ``relaxed`` flags); repeated until the
+    bucket reaches fixpoint;
+  - **heavy settle**: the bucket is at fixpoint — its members' distances
+    are final; relax their heavy edges (w > delta) once and advance to
+    the next non-empty bucket (computed directly from the unsettled
+    minimum, so empty buckets cost nothing).
+
+  Both phases are ONE masked min-plus relaxation
+  (``traversal.semiring.tropical_relax``): inactive sources carry inf
+  values and phase-excluded edges inf weights, so light and heavy lanes
+  share each edge-parallel pass, cond-skipped when no lane is in that
+  phase (exactly the TD/BU dispatch pattern of
+  ``packed.dispatch_packed_step``).
+
+With unit weights and ``delta = 1`` bucket ``b`` IS the BFS layer ``b``
+frontier and the engine reproduces ``msbfs_pipelined`` depths exactly —
+the boolean-semiring anchor ``tests/test_traversal.py`` pins.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csr import WeightedCSRGraph
+from repro.core.packed import queue_claims
+from repro.traversal.semiring import INF, tropical_relax
+
+__all__ = [
+    "DEFAULT_LANES", "MAX_SSSP_STEPS", "SSSPResult", "default_delta",
+    "sssp_engine_drain", "sssp_engine_enqueue", "sssp_engine_idle",
+    "sssp_engine_init", "sssp_engine_result", "sssp_engine_step",
+    "sssp_pipelined",
+]
+
+# dense float lanes cost 32x the state of packed bit lanes — the default
+# pool is correspondingly narrower than MAX_LANES * words
+DEFAULT_LANES = 32
+
+# hard per-lane step bound (safety net mirroring MAX_TRACE): every light
+# iteration either changes a distance or settles the bucket, so real
+# workloads finish in O(buckets + light rounds) << this
+MAX_SSSP_STEPS = 4096
+
+
+class SSSPResult(NamedTuple):
+    sources: jnp.ndarray       # int32[R] root vertex per lane
+    dist: jnp.ndarray          # float32[n, R], inf unreached
+    steps: jnp.ndarray         # int32[R] engine steps the lane ran
+    truncated: jnp.ndarray     # bool[R] — lane hit max_steps; dist is a
+    #                            PARTIAL relaxation, not shortest paths
+
+    def reached(self) -> jnp.ndarray:
+        """bool[n, R] — vertices with a finite distance per lane."""
+        return jnp.isfinite(self.dist)
+
+    def as_depth(self) -> jnp.ndarray:
+        """int32[n, R] MS-BFS-style depths (-1 unreached) — exact for
+        unit weights, where distance == hop count; the representation the
+        boolean-anchor equivalence test compares bit-for-bit."""
+        return jnp.where(jnp.isfinite(self.dist),
+                         jnp.round(self.dist), -1).astype(jnp.int32)
+
+
+class SSSPState(NamedTuple):
+    dist: jnp.ndarray          # float32[n, L]  lane distances (inf idle)
+    relaxed: jnp.ndarray       # bool[n, L]     light edges relaxed at dist
+    lane_bucket: jnp.ndarray   # int32[L]       current bucket per lane
+    lane_steps: jnp.ndarray    # int32[L]       steps run for the lane's root
+    lane_qidx: jnp.ndarray     # int32[L]       queue slot served; capacity = idle
+    queue: jnp.ndarray         # int32[capacity] enqueued source ids
+    queued: jnp.ndarray        # int32 scalar
+    next_root: jnp.ndarray     # int32 scalar
+    sweep_steps: jnp.ndarray   # int32 scalar   total engine steps
+    out_dist: jnp.ndarray      # float32[n, capacity+1] (+1 = trash column)
+    out_steps: jnp.ndarray     # int32[capacity+1]  0 = unanswered
+    out_truncated: jnp.ndarray  # bool[capacity+1]  lane flushed by the cap
+
+    @property
+    def num_lanes(self) -> int:
+        return self.lane_qidx.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.queue.shape[0]
+
+
+def default_delta(wg: WeightedCSRGraph) -> float:
+    """Meyer & Sanders' Theta(1/d) rule scaled to the weight range:
+    ``max_w / avg_degree`` — buckets wide enough that light phases do a
+    few iterations, narrow enough that heavy edges skip bucket work.
+    Falls back to 1.0 on edgeless or all-zero-weight graphs (one bucket
+    holds everything and light iteration degenerates to Bellman-Ford)."""
+    if wg.m == 0:
+        return 1.0
+    w_max = float(np.asarray(wg.weights).max())
+    avg_deg = wg.m / max(wg.n, 1)
+    delta = w_max / max(avg_deg, 1.0)
+    return delta if delta > 0 else 1.0
+
+
+def sssp_engine_init(wg: WeightedCSRGraph, capacity: int,
+                     lanes: int = DEFAULT_LANES) -> SSSPState:
+    """Fresh SSSP engine: all lanes idle, empty source queue of
+    ``capacity`` slots — the weighted mirror of ``msbfs_engine_init``."""
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
+    if lanes < 1:
+        raise ValueError(f"lanes must be >= 1, got {lanes}")
+    n = wg.n
+    cap = capacity
+    return SSSPState(
+        dist=jnp.full((n, lanes), jnp.inf, jnp.float32),
+        relaxed=jnp.zeros((n, lanes), jnp.bool_),
+        lane_bucket=jnp.zeros((lanes,), jnp.int32),
+        lane_steps=jnp.zeros((lanes,), jnp.int32),
+        lane_qidx=jnp.full((lanes,), cap, jnp.int32),
+        queue=jnp.zeros((cap,), jnp.int32),
+        queued=jnp.int32(0),
+        next_root=jnp.int32(0),
+        sweep_steps=jnp.int32(0),
+        out_dist=jnp.full((n, cap + 1), jnp.inf, jnp.float32),
+        out_steps=jnp.zeros((cap + 1,), jnp.int32),
+        out_truncated=jnp.zeros((cap + 1,), jnp.bool_),
+    )
+
+
+def sssp_engine_enqueue(state: SSSPState, roots) -> SSSPState:
+    """Append sources to the pending queue (host helper, mid-sweep safe) —
+    same contract as ``msbfs_engine_enqueue``."""
+    roots = jnp.asarray(roots, jnp.int32).reshape(-1)
+    k = roots.shape[0]
+    queued = int(state.queued)
+    if queued + k > state.capacity:
+        raise ValueError(
+            f"queue overflow: {queued} queued + {k} new > capacity "
+            f"{state.capacity}")
+    queue = jax.lax.dynamic_update_slice(state.queue, roots,
+                                         (state.queued,))
+    return state._replace(queue=queue, queued=state.queued + jnp.int32(k))
+
+
+def sssp_engine_idle(state: SSSPState) -> bool:
+    """True when no lane is active and no enqueued source is pending."""
+    return (int(state.next_root) >= int(state.queued)
+            and not bool(jnp.any(state.lane_qidx < state.capacity)))
+
+
+def _refill(wg: WeightedCSRGraph, s: SSSPState) -> SSSPState:
+    """Claim pending queue slots for idle lanes and seat their sources at
+    distance 0, bucket 0 — ``packed.queue_claims`` keeps the claim rule
+    bit-identical to the MS-BFS engines'."""
+    n = wg.n
+
+    def do_refill(s: SSSPState) -> SSSPState:
+        claim, cand, root = queue_claims(s.lane_qidx, s.next_root,
+                                         s.queued, s.queue)
+        onehot = claim[None, :] & (root[None, :]
+                                   == jnp.arange(n, dtype=jnp.int32)[:, None])
+        return s._replace(
+            dist=jnp.where(claim[None, :],
+                           jnp.where(onehot, jnp.float32(0), INF), s.dist),
+            relaxed=jnp.where(claim[None, :], False, s.relaxed),
+            lane_bucket=jnp.where(claim, 0, s.lane_bucket),
+            lane_steps=jnp.where(claim, 0, s.lane_steps),
+            lane_qidx=jnp.where(claim, cand, s.lane_qidx),
+            next_root=s.next_root + jnp.sum(claim, dtype=jnp.int32),
+        )
+
+    needed = jnp.any(s.lane_qidx >= s.capacity) & (s.next_root < s.queued)
+    return jax.lax.cond(needed, do_refill, lambda s: s, s)
+
+
+def _phase_relax(g, sel: jnp.ndarray, dist: jnp.ndarray,
+                 phase_w: jnp.ndarray, max_pos: int,
+                 relax_impl: str) -> jnp.ndarray:
+    """One cond-skipped masked relaxation: sources where ``sel``, edge
+    weights ``phase_w`` (inf = excluded). Returns the min-plus candidate
+    distances [n, L] (inf when the phase is empty this step)."""
+    def run(dist):
+        vals = jnp.where(sel, dist, INF)
+        return tropical_relax(g, phase_w, vals, max_pos, relax_impl)
+
+    return jax.lax.cond(jnp.any(sel), run,
+                        lambda dist: jnp.full_like(dist, jnp.inf), dist)
+
+
+def _sssp_body(wg: WeightedCSRGraph, s: SSSPState, delta: float,
+               max_pos: int, relax_impl: str,
+               max_steps: int) -> SSSPState:
+    """One engine step: refill idle lanes, run the light/heavy phase each
+    lane is in, settle + advance fixpoint buckets, flush finished lanes."""
+    g = wg.csr
+    cap = s.capacity
+    s = _refill(wg, s)
+
+    d32 = jnp.float32(delta)
+    active = s.lane_qidx < cap
+    # membership is CEILING-ONLY (dist < (b+1)*delta, no lower bound):
+    # already-settled vertices re-enter the mask but their re-relaxations
+    # are idempotent, and no vertex can fall between buckets when float32
+    # rounding of floor(dist/delta) disagrees with the boundary product —
+    # the correctness-over-thrift call for the masked dense formulation,
+    # where the per-step edge-parallel cost is O(m*L) regardless
+    b_hi = (s.lane_bucket.astype(jnp.float32) + 1) * d32      # [L]
+    in_bucket = active[None, :] & (s.dist < b_hi[None, :])    # [n, L]
+    light_pending = in_bucket & ~s.relaxed
+
+    # phase per lane: request set non-empty -> keep iterating light edges;
+    # empty -> the bucket is at fixpoint, settle it (heavy relax + advance)
+    iterating = light_pending.any(axis=0)                     # bool[L]
+    settling = active & ~iterating
+
+    light_w = jnp.where(wg.weights <= d32, wg.weights, INF)
+    heavy_w = jnp.where(wg.weights > d32, wg.weights, INF)
+    cand_light = _phase_relax(g, light_pending & iterating[None, :],
+                              s.dist, light_w, max_pos, relax_impl)
+    cand_heavy = _phase_relax(g, in_bucket & settling[None, :],
+                              s.dist, heavy_w, max_pos, relax_impl)
+
+    new_dist = jnp.minimum(s.dist, jnp.minimum(cand_light, cand_heavy))
+    changed = new_dist < s.dist
+    # sources just relaxed are served at their current distance; any
+    # vertex whose distance improved re-enters its bucket's request set
+    relaxed2 = (s.relaxed | (light_pending & iterating[None, :])) & ~changed
+
+    # settling lanes advance straight to the next non-empty bucket: the
+    # minimum unsettled distance names it, empty buckets are never
+    # visited; the max() keeps the advance strictly monotone even when
+    # float32 division rounds the quotient below the bucket boundary
+    unsettled = jnp.where(new_dist >= b_hi[None, :], new_dist, INF)
+    min_unsettled = jnp.min(unsettled, axis=0)                # [L]
+    exhausted = settling & ~jnp.isfinite(min_unsettled)
+    next_bucket = jnp.where(
+        settling & jnp.isfinite(min_unsettled),
+        jnp.maximum(jnp.floor(min_unsettled / d32).astype(jnp.int32),
+                    s.lane_bucket + 1),
+        s.lane_bucket)
+
+    lane_steps2 = s.lane_steps + active.astype(jnp.int32)
+    # the cap is a safety net, not an answer: a capped lane's distances
+    # are a PARTIAL relaxation, so its flush is marked truncated — the
+    # one bit that separates "converged" from "gave up" downstream
+    capped = active & (lane_steps2 >= max_steps) & ~exhausted
+    finished = exhausted | capped
+
+    fcol = jnp.where(finished, s.lane_qidx, cap)
+    out_dist = s.out_dist.at[:, fcol].set(new_dist)
+    out_steps = s.out_steps.at[fcol].set(lane_steps2)
+    out_truncated = s.out_truncated.at[fcol].set(capped)
+
+    return s._replace(
+        dist=jnp.where(finished[None, :], INF, new_dist),
+        relaxed=relaxed2 & ~finished[None, :],
+        lane_bucket=jnp.where(finished, 0, next_bucket),
+        lane_steps=jnp.where(finished, 0, lane_steps2),
+        lane_qidx=jnp.where(finished, cap, s.lane_qidx),
+        sweep_steps=s.sweep_steps + 1,
+        out_dist=out_dist, out_steps=out_steps,
+        out_truncated=out_truncated,
+    )
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4, 5))
+def sssp_engine_step(wg: WeightedCSRGraph, state: SSSPState, delta: float,
+                     max_pos: int = 8, relax_impl: str = "xla",
+                     max_steps: int = MAX_SSSP_STEPS) -> SSSPState:
+    """Advance the SSSP engine by one phase step (streaming API).
+
+    Compiles once per (graph shape, lanes, capacity, delta); the serving
+    loop interleaves ``sssp_engine_enqueue`` between steps to feed idle
+    lanes mid-sweep, exactly like the MS-BFS engine it mirrors.
+    """
+    if not delta > 0:
+        raise ValueError(f"delta must be > 0, got {delta}")
+    return _sssp_body(wg, state, delta, max_pos, relax_impl, max_steps)
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4, 5))
+def _drain(wg: WeightedCSRGraph, state: SSSPState, delta: float,
+           max_pos: int, relax_impl: str, max_steps: int) -> SSSPState:
+    cap = state.queue.shape[0]
+
+    def cond_fn(s: SSSPState):
+        return (s.next_root < s.queued) | jnp.any(s.lane_qidx < cap)
+
+    def body_fn(s: SSSPState):
+        return _sssp_body(wg, s, delta, max_pos, relax_impl, max_steps)
+
+    return jax.lax.while_loop(cond_fn, body_fn, state)
+
+
+def sssp_engine_drain(wg: WeightedCSRGraph, state: SSSPState, delta: float,
+                      max_pos: int = 8, relax_impl: str = "xla",
+                      max_steps: int = MAX_SSSP_STEPS) -> SSSPState:
+    """Step the engine until every enqueued source has been answered."""
+    if not delta > 0:
+        raise ValueError(f"delta must be > 0, got {delta}")
+    return _drain(wg, state, delta, max_pos, relax_impl, max_steps)
+
+
+def sssp_engine_result(state: SSSPState) -> SSSPResult:
+    """Assemble an ``SSSPResult`` over the answered queue slots (columns
+    of unanswered slots hold init values: inf distances, 0 steps).
+    ``truncated`` lanes hit the ``max_steps`` cap — their distances are
+    partial relaxations, NOT shortest paths (re-run with a larger delta
+    or a larger cap)."""
+    r = int(state.queued)
+    return SSSPResult(sources=state.queue[:r],
+                      dist=state.out_dist[:, :r],
+                      steps=state.out_steps[:r],
+                      truncated=state.out_truncated[:r])
+
+
+def sssp_pipelined(wg: WeightedCSRGraph, roots, delta: float | None = None,
+                   lanes: int = DEFAULT_LANES, max_pos: int = 8,
+                   relax_impl: str = "xla",
+                   max_steps: int = MAX_SSSP_STEPS) -> SSSPResult:
+    """Answer an arbitrary number of SSSP sources in ONE pipelined sweep.
+
+    Sources beyond the lane pool wait in the pending queue and stream
+    into lanes as they free up — no barrier between lane generations, so
+    a many-bucket source never stalls shallow ones. ``delta=None`` picks
+    ``default_delta(wg)``.
+    """
+    roots = jnp.asarray(roots, jnp.int32).reshape(-1)
+    num_roots = roots.shape[0]
+    if num_roots < 1:
+        raise ValueError("need at least one source")
+    if delta is None:
+        delta = default_delta(wg)
+    lanes = max(1, min(lanes, num_roots))
+    state = sssp_engine_init(wg, capacity=num_roots, lanes=lanes)
+    state = sssp_engine_enqueue(state, roots)
+    state = sssp_engine_drain(wg, state, float(delta), max_pos, relax_impl,
+                              max_steps)
+    return sssp_engine_result(state)

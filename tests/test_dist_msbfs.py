@@ -11,6 +11,7 @@ adaptive-pool sizing unit tests run in-process.
 import pytest
 from conftest import run_in_subprocess
 
+from repro.core import packed
 from repro.core.packed import adaptive_lane_pool
 
 CODE = """
@@ -96,6 +97,9 @@ print("DIST_MODES_OK")
 
 
 def test_dist_msbfs_forced_modes_and_pallas_probe():
+    if packed.LANE_WORD_BITS != 32:
+        pytest.skip("msbfs_probe kernel is uint32-only — the u64 gather "
+                    "path is the ROADMAP's next kernel rung")
     out = run_in_subprocess(MODES_CODE, devices=4)
     assert "DIST_MODES_OK" in out
 
@@ -141,8 +145,10 @@ def test_dist_msbfs_streaming_enqueue_mid_sweep():
 
 
 def test_adaptive_lane_pool_rules():
-    # full-word granularity, bounded below by one word
-    assert adaptive_lane_pool(1, 1000, 4000) == 32
+    # full-word granularity, bounded below by one word (the word width
+    # follows LANE_WORD_BITS — the u64 CI leg runs these at 64)
+    word = packed.LANE_WORD_BITS
+    assert adaptive_lane_pool(1, 1000, 4000) == word
     assert adaptive_lane_pool(40, 1000, 100) == 64
     # never (usefully) wider than pending, monotone in pending
     sparse = [adaptive_lane_pool(p, 10_000, 20_000) for p in (8, 64, 500)]
@@ -155,7 +161,7 @@ def test_adaptive_lane_pool_rules():
     # state budget caps huge graphs regardless of pending
     big = adaptive_lane_pool(10_000, 200_000_000, 16 * 200_000_000,
                              state_budget_bytes=64 << 20)
-    assert big == 32
+    assert big == word
     with pytest.raises(ValueError):
         adaptive_lane_pool(4, 0, 0)
 

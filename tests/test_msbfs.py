@@ -115,6 +115,9 @@ def test_msbfs_per_lane_trace_matches_serial(g_rmat):
 
 
 def test_msbfs_pallas_probe_end_to_end(g_rmat):
+    if packed.LANE_WORD_BITS != 32:
+        pytest.skip("msbfs_probe kernel is uint32-only — the u64 gather "
+                    "path is the ROADMAP's next kernel rung")
     roots = sample_roots(g_rmat, 40, seed=4)
     out = msbfs(g_rmat, jnp.asarray(roots), "hybrid", 14.0, 24.0, 8,
                 "pallas")
@@ -138,6 +141,23 @@ def lane_word_bits(bits):
             yield
     finally:
         packed.LANE_WORD_BITS = old
+
+
+def test_word_dtype_x64_guard_names_fix():
+    """64-bit lane words without jax x64 must fail loudly (a silent
+    uint64->uint32 downcast drops lanes 32-63), and the error must NAME
+    the fix — the exact config call to run."""
+    old = packed.LANE_WORD_BITS
+    packed.LANE_WORD_BITS = 64
+    try:
+        with jax.experimental.disable_x64():
+            with pytest.raises(RuntimeError) as exc:
+                packed.word_dtype()
+    finally:
+        packed.LANE_WORD_BITS = old
+    msg = str(exc.value)
+    assert 'jax.config.update("jax_enable_x64", True)' in msg
+    assert "JAX_ENABLE_X64" in msg
 
 
 @pytest.mark.parametrize("bits", [32, 64])
@@ -267,6 +287,9 @@ def test_pipelined_forced_modes(g_rmat, mode):
 
 def test_pipelined_pallas_probe(g_rmat):
     """R > MAX_LANES through the W-parametric Pallas probe kernel."""
+    if packed.LANE_WORD_BITS != 32:
+        pytest.skip("msbfs_probe kernel is uint32-only — the u64 gather "
+                    "path is the ROADMAP's next kernel rung")
     roots = sample_roots(g_rmat, 72, seed=14)
     out = msbfs_pipelined(g_rmat, jnp.asarray(roots), "hybrid",
                           probe_impl="pallas", lanes=64)

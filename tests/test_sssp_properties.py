@@ -1,0 +1,159 @@
+"""Property-based delta-stepping suite: every tropical lane == Dijkstra.
+
+Randomized weighted graphs — disconnected components, zero-weight edges,
+duplicate/parallel edges, isolated sources, star/path shapes, adversarial
+bucket widths — are swept with hypothesis (importorskip-guarded, the
+``test_msbfs_properties`` pattern) through the pipelined SSSP engine with
+a lane pool SMALLER than the source count, so every example exercises
+queue refill mid-sweep.
+
+Each lane must reproduce the binary-heap Dijkstra oracle
+(``traversal.ref.dijkstra_reference``): identical reached sets, distances
+equal to float32 accumulation tolerance. Unit-weight examples are
+additionally pinned BIT-IDENTICAL to ``msbfs_pipelined`` depths — the
+boolean-semiring anchor. A deterministic fallback case set always runs
+and the hypothesis profile is derandomized (fixed seed, bounded examples)
+so ``make test-properties`` stays reproducible in CI.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.csr import from_weighted_edges
+from repro.core.msbfs import msbfs_pipelined
+from repro.traversal import (dijkstra_reference, sssp_pipelined,
+                             to_numpy_weighted)
+
+MAX_EXAMPLES = int(os.environ.get("MSBFS_PROP_EXAMPLES", "10"))
+
+SHAPES = ("random", "star", "path", "two_components")
+WEIGHT_MODELS = ("uniform", "unit", "with_zeros", "integer")
+
+
+def build_case(n: int, m: int, seed: int, shape: str, weight_model: str,
+               dup_edges: bool):
+    """Build (weighted graph, sources, delta) for one property example.
+
+    Sources are drawn from ALL vertices — isolated (degree-0) sources
+    included. ``delta`` is drawn adversarially around the weight scale so
+    all-light, all-heavy and mixed bucket splits are all exercised.
+    """
+    rng = np.random.default_rng(seed)
+    if shape == "star":
+        src = np.zeros(max(n - 1, 1), np.int64)
+        dst = np.arange(1, max(n, 2), dtype=np.int64)
+    elif shape == "path":
+        ln = min(n, 40)
+        src = np.arange(ln - 1, dtype=np.int64)
+        dst = src + 1
+    elif shape == "two_components":
+        h = max(n // 2, 2)
+        s1 = rng.integers(0, h, max(m // 2, 1))
+        d1 = rng.integers(0, h, max(m // 2, 1))
+        s2 = rng.integers(h, n, max(m // 2, 1)) if n > h else s1
+        d2 = rng.integers(h, n, max(m // 2, 1)) if n > h else d1
+        src = np.concatenate([s1, s2])
+        dst = np.concatenate([d1, d2])
+    else:  # random G(n, m) with repetition
+        src = rng.integers(0, n, max(m, 1))
+        dst = rng.integers(0, n, max(m, 1))
+    if dup_edges and len(src):
+        take = rng.integers(0, len(src), max(len(src) // 2, 1))
+        src = np.concatenate([src, src[take]])
+        dst = np.concatenate([dst, dst[take]])
+
+    if weight_model == "unit":
+        w = np.ones(len(src))
+    elif weight_model == "with_zeros":
+        w = rng.uniform(0.0, 1.0, len(src))
+        w[rng.random(len(src)) < 0.3] = 0.0
+    elif weight_model == "integer":
+        w = rng.integers(0, 5, len(src)).astype(np.float64)
+    else:
+        w = rng.uniform(0.0, 1.0, len(src))
+
+    wg = from_weighted_edges(src, dst, w, n, symmetrize=True,
+                             drop_self_loops=True)
+    num_src = min(n, int(rng.integers(2, 7)))
+    sources = rng.choice(n, size=num_src, replace=False)
+    # adversarial bucket widths: below/at/above the weight scale
+    delta = float(rng.choice([0.05, 0.5, 1.0, 7.0]))
+    return wg, sources, delta
+
+
+def _check_case(n, m, seed, shape, weight_model, dup_edges):
+    wg, sources, delta = build_case(n, m, seed, shape, weight_model,
+                                    dup_edges)
+    lanes = max(1, len(sources) // 2)        # queue refill is exercised
+    res = sssp_pipelined(wg, sources, delta=delta, lanes=lanes)
+    rp, ci, w = to_numpy_weighted(wg)
+    for i, r in enumerate(sources):
+        ref = dijkstra_reference(rp, ci, w, int(r))
+        got = np.asarray(res.dist[:, i], np.float64)
+        np.testing.assert_array_equal(
+            np.isfinite(got), np.isfinite(ref),
+            err_msg=f"lane {i} (root {r}) reached set, delta={delta}")
+        fin = np.isfinite(ref)
+        np.testing.assert_allclose(
+            got[fin], ref[fin], atol=1e-4,
+            err_msg=f"lane {i} (root {r}) distances, delta={delta}")
+    if weight_model == "unit":
+        # the boolean-semiring anchor on fuzzed shapes: distance == depth
+        mres = msbfs_pipelined(wg.csr, jnp.asarray(sources, jnp.int32),
+                               "hybrid", lanes=max(1, len(sources) // 2))
+        np.testing.assert_array_equal(np.asarray(res.as_depth()),
+                                      np.asarray(mres.depth))
+
+
+def test_property_sssp_random_graphs():
+    """Hypothesis sweep — skipped without hypothesis (the deterministic
+    fallback below pins the same invariants). Derandomized: fixed seed,
+    MSBFS_PROP_EXAMPLES bounds the example count (CI sets it)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=MAX_EXAMPLES, deadline=None, derandomize=True)
+    @given(st.integers(4, 70), st.integers(1, 220), st.integers(0, 10 ** 6),
+           st.sampled_from(SHAPES), st.sampled_from(WEIGHT_MODELS),
+           st.booleans())
+    def inner(n, m, seed, shape, weight_model, dup_edges):
+        _check_case(n, m, seed, shape, weight_model, dup_edges)
+
+    inner()
+
+
+DETERMINISTIC_CASES = [
+    # n, m, seed, shape, weight_model, dup_edges
+    (40, 120, 0, "random", "uniform", False),
+    (33, 50, 1, "random", "with_zeros", True),   # zero weights + dup edges
+    (60, 10, 2, "random", "uniform", False),     # sparse -> isolated sources
+    (25, 0, 3, "star", "integer", False),        # integer (tie-heavy) weights
+    (44, 0, 4, "path", "uniform", True),         # deep chains of light edges
+    (30, 0, 5, "path", "unit", False),           # unit weights == BFS anchor
+    (48, 80, 6, "two_components", "uniform", False),
+    (36, 90, 7, "random", "unit", True),         # unit anchor, messy graph
+]
+
+
+@pytest.mark.parametrize("n,m,seed,shape,weight_model,dup_edges",
+                         DETERMINISTIC_CASES)
+def test_deterministic_sssp_cases(n, m, seed, shape, weight_model,
+                                  dup_edges):
+    """Fixed fallback case set for the property above — always runs."""
+    _check_case(n, m, seed, shape, weight_model, dup_edges)
+
+
+def test_isolated_source_answers_immediately():
+    """A degree-0 source's lane reaches exactly itself at distance 0."""
+    wg = from_weighted_edges(np.array([0, 1, 2, 3]), np.array([1, 2, 3, 4]),
+                             np.array([0.3, 0.1, 0.7, 0.2]), 6)
+    res = sssp_pipelined(wg, [5, 0], lanes=1)
+    d = np.asarray(res.dist[:, 0])
+    assert d[5] == 0.0 and not np.isfinite(np.delete(d, 5)).any()
+    rp, ci, w = to_numpy_weighted(wg)
+    ref = dijkstra_reference(rp, ci, w, 0)
+    np.testing.assert_allclose(np.asarray(res.dist[:5, 1]), ref[:5],
+                               atol=1e-6)

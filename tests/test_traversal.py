@@ -1,0 +1,438 @@
+"""Semiring traversal subsystem: abstraction, kernel parity, SSSP anchors.
+
+Three layers of pinning:
+
+* the ``Semiring`` step primitives against hand oracles and against the
+  PACKED engine's own formulations (boolean semiring == unpacked
+  top-down step — the generic path must reproduce the bit engines);
+* the ``semiring_relax`` Pallas kernel against its pure-jnp ref across a
+  lane-count/MAX_POS/shape sweep (including the distributed local-block
+  shape);
+* the delta-stepping engine against Dijkstra, and — the hard anchor —
+  unit-weight SSSP bit-identical (depths, reached sets) to
+  ``msbfs_pipelined`` on the same roots.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analytics import (ClosenessQuery, LaneEngine, SSSPQuery,
+                             WeightedClosenessQuery, run_query,
+                             sssp_distances, weighted_closeness_centrality)
+from repro.core.csr import from_weighted_edges
+from repro.core.msbfs import msbfs_pipelined
+from repro.core.packed import pack_lanes, topdown_packed_step, unpack_lanes
+from repro.graph.generator import (rmat_graph, rmat_weighted_graph,
+                                   sample_roots,
+                                   uniform_random_weighted_graph)
+from repro.kernels import semiring_relax_pallas, semiring_relax_ref
+from repro.traversal import (BOOLEAN, PLUS_TIMES, TROPICAL, default_delta,
+                             dijkstra_reference, segment_reduce,
+                             semiring_spmv, sssp_engine_drain,
+                             sssp_engine_enqueue, sssp_engine_idle,
+                             sssp_engine_init, sssp_engine_result,
+                             sssp_engine_step, sssp_pipelined,
+                             to_numpy_weighted, tropical_relax)
+
+
+@pytest.fixture(scope="module")
+def wg_rmat():
+    return rmat_weighted_graph(8, 8, seed=0)
+
+
+def _assert_dist_matches_dijkstra(wg, roots, dist, atol=1e-4):
+    rp, ci, w = to_numpy_weighted(wg)
+    for i, r in enumerate(np.asarray(roots)):
+        ref = dijkstra_reference(rp, ci, w, int(r))
+        got = np.asarray(dist[:, i], np.float64)
+        np.testing.assert_array_equal(np.isfinite(got), np.isfinite(ref),
+                                      err_msg=f"lane {i} reached set")
+        fin = np.isfinite(ref)
+        np.testing.assert_allclose(got[fin], ref[fin], atol=atol,
+                                   err_msg=f"lane {i} distances (root {r})")
+
+
+# ---------------------------------------------------------------------------
+# Semiring primitives
+# ---------------------------------------------------------------------------
+
+
+def test_segment_reduce_tropical_hand_case():
+    """Rows [a,b], [], [c], [] — min per row, inf for empty rows
+    (including trailing ones whose start == m)."""
+    row_ptr = jnp.asarray([0, 2, 2, 3, 3], jnp.int32)
+    vals = jnp.asarray([[3.0], [1.5], [7.0]], jnp.float32)
+    out = np.asarray(segment_reduce(vals, row_ptr, TROPICAL))
+    np.testing.assert_array_equal(
+        out, np.asarray([[1.5], [np.inf], [7.0], [np.inf]], np.float32))
+
+
+def test_segment_reduce_plus_times_hand_case():
+    row_ptr = jnp.asarray([0, 2, 2, 3], jnp.int32)
+    vals = jnp.asarray([[3.0], [1.5], [7.0]], jnp.float32)
+    out = np.asarray(segment_reduce(vals, row_ptr, PLUS_TIMES))
+    np.testing.assert_array_equal(
+        out, np.asarray([[4.5], [0.0], [7.0]], np.float32))
+
+
+def test_boolean_spmv_matches_packed_topdown_step():
+    """The boolean-semiring SpMV IS the packed top-down expansion: dense
+    0/1 lanes through the generic path == unpacked engine words."""
+    g = rmat_graph(7, 6, seed=3)
+    rng = np.random.default_rng(3)
+    lanes = 5
+    fro = rng.random((g.n, lanes)) < 0.2
+    dense = semiring_spmv(g, jnp.asarray(fro, jnp.uint8), None, BOOLEAN)
+
+    words = pack_lanes(jnp.asarray(fro))
+    sel = pack_lanes(jnp.ones((lanes,), jnp.bool_))
+    packed_new = topdown_packed_step(g, words, jnp.zeros_like(words), sel)
+    np.testing.assert_array_equal(
+        np.asarray(dense, bool),
+        np.asarray(unpack_lanes(packed_new, lanes)))
+
+
+def test_plus_times_spmv_matches_dense_matmul():
+    wg = uniform_random_weighted_graph(60, 240, seed=4)
+    rng = np.random.default_rng(4)
+    x = rng.random((wg.n, 3)).astype(np.float32)
+    out = semiring_spmv(wg.csr, jnp.asarray(x), wg.weights, PLUS_TIMES)
+    # dense weighted adjacency oracle: A[v, u] = sum of parallel weights
+    a = np.zeros((wg.n, wg.n), np.float64)
+    rp, ci, w = to_numpy_weighted(wg)
+    for v in range(wg.n):
+        for e in range(rp[v], rp[v + 1]):
+            a[v, ci[e]] += w[e]
+    np.testing.assert_allclose(np.asarray(out), a @ x, rtol=1e-5, atol=1e-5)
+
+
+def test_tropical_relax_pallas_equals_xla():
+    """Full relax contract (probe + deep-row fallback) agrees between the
+    edge-parallel scan and the kernel path, at a max_pos small enough
+    that the fallback must fire."""
+    wg = uniform_random_weighted_graph(90, 500, seed=5)
+    rng = np.random.default_rng(5)
+    vals = rng.uniform(0, 4, (wg.n, 4)).astype(np.float32)
+    vals[rng.random((wg.n, 4)) < 0.4] = np.inf
+    v = jnp.asarray(vals)
+    assert int(np.asarray(wg.deg).max()) > 2   # fallback genuinely fires
+    a_xla = tropical_relax(wg.csr, wg.weights, v, max_pos=2, impl="xla")
+    a_pal = tropical_relax(wg.csr, wg.weights, v, max_pos=2, impl="pallas")
+    np.testing.assert_allclose(np.asarray(a_xla), np.asarray(a_pal),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# semiring_relax kernel parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lanes", [1, 3, 8])
+@pytest.mark.parametrize("max_pos", [1, 4, 8])
+def test_semiring_relax_kernel_lane_sweep(lanes, max_pos):
+    """Kernel vs oracle over the lane-grid dimension and MAX_POS, with
+    inf-masked sources (the delta-stepping phase encoding)."""
+    wg = uniform_random_weighted_graph(300, 1500, seed=lanes * 10 + max_pos)
+    rng = np.random.default_rng(lanes * 100 + max_pos)
+    vals = rng.uniform(0, 8, (wg.n, lanes)).astype(np.float32)
+    vals[rng.random((wg.n, lanes)) < 0.35] = np.inf
+    v = jnp.asarray(vals)
+    a1 = semiring_relax_pallas(wg.row_ptr[:-1], wg.deg, wg.col_idx,
+                               wg.weights, v, max_pos=max_pos,
+                               interpret=True)
+    a2 = semiring_relax_ref(wg.row_ptr[:-1], wg.deg, wg.col_idx,
+                            wg.weights, v, max_pos=max_pos)
+    assert a1.shape == (wg.n, lanes)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_semiring_relax_local_block_full_values():
+    """Distributed shape: rows cover a LOCAL block, values the full
+    vertex range, col_idx global ids — kernel == oracle (what a future
+    sharded SSSP feeds the kernel under shard_map)."""
+    g = rmat_graph(8, 6, seed=7)
+    from repro.core.dist_bfs import partition_graph
+    dg = partition_graph(g, 2)
+    rng = np.random.default_rng(7)
+    vals = jnp.asarray(rng.uniform(0, 5, (dg.n, 3)).astype(np.float32))
+    for d in range(2):
+        row_ptr = dg.row_ptr[d]
+        starts, deg = row_ptr[:-1], row_ptr[1:] - row_ptr[:-1]
+        w = jnp.asarray(
+            rng.uniform(0, 1, dg.col_idx[d].shape[0]).astype(np.float32))
+        a1 = semiring_relax_pallas(starts, deg, dg.col_idx[d], w, vals,
+                                   max_pos=4, interpret=True)
+        a2 = semiring_relax_ref(starts, deg, dg.col_idx[d], w, vals,
+                                max_pos=4)
+        assert a1.shape == (dg.n // 2, 3)
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_semiring_relax_flat_plane_compat():
+    """float32[n] single planes round-trip (L=1 fast path)."""
+    wg = uniform_random_weighted_graph(120, 500, seed=9)
+    rng = np.random.default_rng(9)
+    v = jnp.asarray(rng.uniform(0, 3, wg.n).astype(np.float32))
+    a1 = semiring_relax_pallas(wg.row_ptr[:-1], wg.deg, wg.col_idx,
+                               wg.weights, v, max_pos=4, interpret=True)
+    a2 = semiring_relax_ref(wg.row_ptr[:-1], wg.deg, wg.col_idx,
+                            wg.weights, v, max_pos=4)
+    assert a1.shape == (wg.n,)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+# ---------------------------------------------------------------------------
+# Weighted CSR construction
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_csr_symmetric_weights():
+    """Symmetrization carries the SAME weight both ways."""
+    wg = from_weighted_edges(np.asarray([0, 1]), np.asarray([1, 2]),
+                             np.asarray([0.5, 2.0]), 3)
+    rp, ci, w = to_numpy_weighted(wg)
+    lut = {(u, v): wt for u, v, wt in
+           zip(np.asarray(wg.src_idx), ci, w)}
+    assert lut[(0, 1)] == lut[(1, 0)] == 0.5
+    assert lut[(1, 2)] == lut[(2, 1)] == 2.0
+
+
+def test_weighted_csr_dedup_keeps_min_weight():
+    wg = from_weighted_edges(np.asarray([0, 0, 0]), np.asarray([1, 1, 1]),
+                             np.asarray([3.0, 1.0, 2.0]), 2, dedup=True)
+    assert wg.m == 2      # one edge each way
+    np.testing.assert_array_equal(np.asarray(wg.weights), [1.0, 1.0])
+
+
+def test_weighted_csr_rejects_negative_and_nan_weights():
+    with pytest.raises(ValueError, match="invalid edge weight"):
+        from_weighted_edges(np.asarray([0]), np.asarray([1]),
+                            np.asarray([-0.5]), 2)
+    # NaN fails both orderings — a min() < 0 guard would let it through
+    with pytest.raises(ValueError, match="invalid edge weight"):
+        from_weighted_edges(np.asarray([0]), np.asarray([1]),
+                            np.asarray([np.nan]), 2)
+    # +inf passes a sign check but would make default_delta inf
+    with pytest.raises(ValueError, match="invalid edge weight"):
+        from_weighted_edges(np.asarray([0]), np.asarray([1]),
+                            np.asarray([np.inf]), 2)
+
+
+def test_engine_caps_pinned_bit_pool_for_dense_lanes(wg_rmat):
+    """A pinned 256-bit-lane pool must NOT become 256 dense float lanes."""
+    from repro.traversal.sssp import DEFAULT_LANES
+    eng = LaneEngine(wg_rmat, lanes=256)
+    assert eng.sssp_lanes_for(300) == DEFAULT_LANES
+    assert eng.sssp_lanes_for(4) == 4
+    narrow = LaneEngine(wg_rmat, lanes=8)
+    assert narrow.sssp_lanes_for(300) == 8
+
+
+def test_rmat_weighted_topology_matches_unweighted():
+    """Same (scale, seed) -> the weighted graph's CSR is bit-identical to
+    ``rmat_graph``'s (weights ride alongside, never perturb topology)."""
+    g = rmat_graph(7, 4, seed=2)
+    wg = rmat_weighted_graph(7, 4, seed=2)
+    np.testing.assert_array_equal(np.asarray(g.row_ptr),
+                                  np.asarray(wg.row_ptr))
+    np.testing.assert_array_equal(np.asarray(g.col_idx),
+                                  np.asarray(wg.col_idx))
+    assert wg.weights.shape == (wg.m,)
+    assert float(np.asarray(wg.weights).min()) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# Delta-stepping engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("relax_impl", ["xla", "pallas"])
+def test_sssp_matches_dijkstra(wg_rmat, relax_impl):
+    roots = sample_roots(wg_rmat, 8, seed=1)
+    res = sssp_pipelined(wg_rmat, roots, lanes=4, relax_impl=relax_impl)
+    _assert_dist_matches_dijkstra(wg_rmat, roots, res.dist)
+
+
+@pytest.mark.parametrize("delta", [0.02, 0.3, 50.0])
+def test_sssp_delta_sweep(wg_rmat, delta):
+    """Any positive bucket width gives the same shortest paths — tiny
+    deltas make every edge heavy (Dijkstra-like bucket walk), huge ones
+    make every edge light (Bellman-Ford iteration)."""
+    roots = sample_roots(wg_rmat, 4, seed=2)
+    res = sssp_pipelined(wg_rmat, roots, delta=delta, lanes=2)
+    _assert_dist_matches_dijkstra(wg_rmat, roots, res.dist)
+
+
+def test_sssp_unit_weight_bit_identical_to_msbfs(wg_rmat):
+    """THE boolean-semiring anchor: unit-weight SSSP == MS-BFS, depths
+    and reached sets bit-for-bit, pipelining (lanes < R) included."""
+    rp, ci, _ = to_numpy_weighted(wg_rmat)
+    unit = from_weighted_edges(
+        np.asarray(wg_rmat.src_idx), ci, np.ones(wg_rmat.m), wg_rmat.n,
+        symmetrize=False, drop_self_loops=False)
+    roots = sample_roots(unit, 12, seed=3)
+    res = sssp_pipelined(unit, roots, delta=1.0, lanes=4)
+    mres = msbfs_pipelined(unit.csr, jnp.asarray(roots, jnp.int32),
+                           "hybrid", lanes=32)
+    np.testing.assert_array_equal(np.asarray(res.as_depth()),
+                                  np.asarray(mres.depth))
+    np.testing.assert_array_equal(np.asarray(res.reached()),
+                                  np.asarray(mres.depth) >= 0)
+
+
+def test_sssp_streaming_enqueue_mid_sweep(wg_rmat):
+    """The pipelined pattern: sources enqueued while lanes are mid-flight
+    land in idle lanes and answer identically to a one-shot drain."""
+    roots = sample_roots(wg_rmat, 6, seed=4)
+    delta = default_delta(wg_rmat)
+    state = sssp_engine_init(wg_rmat, capacity=len(roots), lanes=2)
+    state = sssp_engine_enqueue(state, roots[:3])
+    for _ in range(3):                       # mid-sweep by construction
+        state = sssp_engine_step(wg_rmat, state, delta)
+    assert not sssp_engine_idle(state)
+    state = sssp_engine_enqueue(state, roots[3:])
+    state = sssp_engine_drain(wg_rmat, state, delta)
+    assert sssp_engine_idle(state)
+    out = sssp_engine_result(state)
+    one_shot = sssp_pipelined(wg_rmat, roots, delta=delta, lanes=2)
+    np.testing.assert_array_equal(np.asarray(out.dist),
+                                  np.asarray(one_shot.dist))
+    _assert_dist_matches_dijkstra(wg_rmat, roots, out.dist)
+
+
+def test_sssp_zero_weight_edges():
+    """Zero-weight edges collapse distances within the light fixpoint."""
+    # path 0-1-2-3 with a zero-weight shortcut 0-2
+    wg = from_weighted_edges(np.asarray([0, 1, 2, 0]),
+                             np.asarray([1, 2, 3, 2]),
+                             np.asarray([1.0, 1.0, 1.0, 0.0]), 5)
+    res = sssp_pipelined(wg, [0], delta=0.5)
+    got = np.asarray(res.dist[:, 0])
+    np.testing.assert_allclose(got[:4], [0.0, 1.0, 0.0, 1.0], atol=1e-6)
+    assert not np.isfinite(got[4])           # isolated vertex unreached
+
+
+def test_sssp_rejects_bad_delta(wg_rmat):
+    with pytest.raises(ValueError, match="delta"):
+        sssp_engine_step(wg_rmat, sssp_engine_init(wg_rmat, 1), 0.0)
+
+
+def test_sssp_step_cap_marks_truncated_lanes():
+    """A lane flushed by the max_steps safety net must carry the
+    ``truncated`` marker — its distances are partial relaxations, and
+    without the bit they would be indistinguishable from an answer."""
+    wg = uniform_random_weighted_graph(60, 240, seed=10)
+    roots = [0, 1]
+    capped = sssp_pipelined(wg, roots, delta=0.5, max_steps=2)
+    assert bool(np.asarray(capped.truncated).all())
+    np.testing.assert_array_equal(np.asarray(capped.steps), [2, 2])
+    full = sssp_pipelined(wg, roots, delta=0.5)
+    assert not bool(np.asarray(full.truncated).any())
+    _assert_dist_matches_dijkstra(wg, roots, full.dist)
+
+
+# ---------------------------------------------------------------------------
+# Analytics + query dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_sssp_query_dispatch(wg_rmat):
+    eng = LaneEngine(wg_rmat)
+    roots = tuple(int(r) for r in sample_roots(wg_rmat, 3, seed=5))
+    res = run_query(eng, SSSPQuery(sources=roots))
+    _assert_dist_matches_dijkstra(wg_rmat, np.asarray(roots), res.dist)
+    assert res.delta == pytest.approx(default_delta(wg_rmat))
+    d = res.distances_to([0, 1])
+    assert d.shape == (3, 2)
+
+
+def test_weighted_closeness_unit_weights_equals_hop_closeness():
+    """With unit weights the weighted estimator must reproduce the
+    boolean closeness exactly — same formula, same distances."""
+    wg = uniform_random_weighted_graph(80, 300, seed=6)
+    rp, ci, _ = to_numpy_weighted(wg)
+    unit = from_weighted_edges(np.asarray(wg.src_idx), ci,
+                               np.ones(wg.m), wg.n, symmetrize=False,
+                               drop_self_loops=False)
+    eng = LaneEngine(unit)
+    cw = weighted_closeness_centrality(eng, sources=None, delta=1.0)
+    cb = run_query(eng, ClosenessQuery(sources=None))
+    np.testing.assert_allclose(cw.closeness, cb.closeness, rtol=1e-9)
+    assert cw.meta["weighted"] is True
+
+
+def test_weighted_closeness_sampled_full_coverage_reduces_to_exact():
+    wg = uniform_random_weighted_graph(40, 160, seed=7)
+    eng = LaneEngine(wg)
+    exact = weighted_closeness_centrality(eng, sources=None)
+    full = weighted_closeness_centrality(eng, sources=40)
+    assert full.method == "exact"
+    np.testing.assert_allclose(full.closeness, exact.closeness, rtol=1e-9)
+
+
+def test_weighted_query_on_unweighted_engine_raises(wg_rmat):
+    eng = LaneEngine(wg_rmat.csr)
+    with pytest.raises(TypeError, match="WeightedCSRGraph"):
+        run_query(eng, SSSPQuery(sources=(0,)))
+    with pytest.raises(TypeError, match="WeightedCSRGraph"):
+        sssp_distances(eng, [0])
+
+
+def test_weighted_query_on_dist_engine_names_roadmap_rung(wg_rmat):
+    eng = LaneEngine(wg_rmat, mesh=None, ndev=1)
+    assert eng.weighted
+    # a mesh-backed engine must refuse weighted sweeps with direction
+    from repro.core.dist_msbfs import host_mesh
+    deng = LaneEngine(wg_rmat, mesh=host_mesh(1))
+    with pytest.raises(NotImplementedError, match="ROADMAP"):
+        deng.sssp_sweep([0])
+
+
+# ---------------------------------------------------------------------------
+# Serving loop: sssp-tagged requests in the mixed-workload loop
+# ---------------------------------------------------------------------------
+
+
+def test_serve_mixed_with_sssp():
+    from repro.launch.serve_bfs import Request, serve
+    wg = rmat_weighted_graph(8, 8, seed=0)
+    roots = sample_roots(wg, 6, seed=8)
+    requests = [
+        Request("bfs", np.asarray([roots[0]], np.int32)),
+        Request("sssp", np.asarray([roots[1]], np.int32)),
+        Request("khop", np.asarray([roots[2]], np.int32), k=2),
+        Request("sssp", np.asarray([roots[3]], np.int32)),
+        Request("reach", np.asarray([roots[4]], np.int32),
+                target=int(roots[5])),
+    ]
+    stats = serve(wg, requests, lanes=8, burst=2, every=2, validate=True)
+    assert stats["requests"] == 5
+    assert stats["per_type"]["sssp"]["count"] == 2
+    assert stats["sssp_steps"] > 0 and stats["delta"] > 0
+    # each sssp answer counts exactly the Dijkstra-reachable set
+    rp, ci, w = to_numpy_weighted(wg)
+    for req in requests:
+        if req.qtype == "sssp":
+            ref = dijkstra_reference(rp, ci, w, int(req.roots[0]))
+            assert req.answer["reached"] == int(np.isfinite(ref).sum())
+            assert req.answer["max_dist"] == pytest.approx(
+                float(ref[np.isfinite(ref)].max()), abs=1e-4)
+
+
+def test_serve_sssp_only_mix():
+    """An all-sssp workload runs without the packed engine existing."""
+    from repro.launch.serve_bfs import Request, serve
+    wg = rmat_weighted_graph(7, 6, seed=1)
+    roots = sample_roots(wg, 3, seed=9)
+    requests = [Request("sssp", np.asarray([r], np.int32)) for r in roots]
+    stats = serve(wg, requests, lanes=4, burst=1, every=1)
+    assert stats["per_type"]["sssp"]["count"] == 3
+    assert stats["aggregate_mteps"] == 0.0   # no packed-engine edges
+
+
+def test_serve_sssp_on_unweighted_graph_raises():
+    from repro.launch.serve_bfs import Request, serve
+    g = rmat_graph(7, 6, seed=1)
+    req = [Request("sssp", np.asarray([0], np.int32))]
+    with pytest.raises(ValueError, match="WeightedCSRGraph"):
+        serve(g, req, lanes=4, burst=1, every=1)
