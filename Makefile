@@ -7,6 +7,8 @@
 #   make bench-smoke      MS-BFS TEPS curve (R=64/128/256) at a small scale
 #   make bench            the same at the paper-protocol scale 14
 #   make bench-dist       sharded MS-BFS scaling curve (ndev 1/2/4)
+#   make bench-dist2d     2-D grid MS-BFS: TEPS + bytes-exchanged-per-layer
+#                         for dense vs compressed frontier wire formats
 #   make bench-analytics  analytics workloads (components/closeness/khop)
 #                         TEPS-equivalent throughput on the lane engine
 #   make bench-sssp       weighted-path workloads (delta-stepping SSSP /
@@ -18,7 +20,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-properties test-dist bench-smoke bench bench-dist \
-        bench-analytics bench-sssp ci-bench lint
+        bench-dist2d bench-analytics bench-sssp ci-bench lint
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -26,11 +28,11 @@ test:
 test-properties:
 	MSBFS_PROP_EXAMPLES=25 $(PYTHON) -m pytest \
 	    tests/test_msbfs_properties.py tests/test_sssp_properties.py \
-	    tests/test_validate.py -q
+	    tests/test_compression_properties.py tests/test_validate.py -q
 
 test-dist:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 $(PYTHON) -m pytest \
-	    tests/test_dist_bfs.py tests/test_dist_msbfs.py \
+	    tests/test_dist_bfs.py tests/test_dist_msbfs.py tests/test_dist2d.py \
 	    tests/test_analytics.py::test_analytics_ndev2_parity -q
 
 bench-smoke:
@@ -41,6 +43,9 @@ bench:
 
 bench-dist:
 	$(PYTHON) benchmarks/dist_msbfs_teps.py --scale 12
+
+bench-dist2d:
+	$(PYTHON) benchmarks/dist2d_teps.py --scale 12
 
 bench-analytics:
 	$(PYTHON) benchmarks/analytics_bench.py --scale 12

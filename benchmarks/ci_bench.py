@@ -12,7 +12,10 @@ Collects one higher-is-better throughput number per benchmark:
   weighted closeness, ``sssp_bench.bench_points`` at scale 10);
 * the distributed MS-BFS smoke (``dist_msbfs_teps.py --smoke``), run in a
   subprocess so the forced host-device count never leaks into the
-  single-device timings.
+  single-device timings;
+* the 2-D grid smoke (``dist2d_teps.py --smoke``, same subprocess
+  isolation): per-wire-format TEPS plus the exchange-volume reduction
+  ratio from frontier compression.
 
 Gate: with ``--baseline BENCH_baseline.json``, exit 1 when any benchmark
 regresses more than ``--tolerance`` (default 25%) below its baseline
@@ -101,6 +104,33 @@ def _bench_dist_smoke() -> dict:
             for k, v in points.items()}
 
 
+def _bench_dist2d_smoke() -> dict:
+    """2-D grid smoke (``dist2d_teps.py --smoke``): TEPS per wire format
+    plus the headline ``xreduction`` ratio (dense bytes / compressed
+    bytes, higher is better). Raw ``bytes_per_layer`` points are
+    lower-is-better and so stay out of the gate — the ratio carries the
+    same signal in gateable form."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        tmp = f.name
+    try:
+        subprocess.run(
+            [sys.executable, os.path.join(here, "dist2d_teps.py"),
+             "--smoke", "--json", tmp],
+            check=True, env=dict(os.environ), timeout=1800)
+        with open(tmp) as f:
+            points = json.load(f)
+    finally:
+        os.unlink(tmp)
+    out = {}
+    for k, v in points.items():
+        if k.endswith("_bytes_per_layer"):
+            continue
+        unit = "ratio" if k.endswith("_xreduction") else "teps"
+        out[f"dist2d.{k}"] = dict(value=v, unit=unit)
+    return out
+
+
 def compare(pr: dict, baseline: dict, tolerance: float) -> list[str]:
     """Regressions worse than ``tolerance`` (fractional drop), as
     human-readable failure lines."""
@@ -139,6 +169,7 @@ def main() -> None:
     benches.update(_bench_sssp())
     if not args.skip_dist:
         benches.update(_bench_dist_smoke())
+        benches.update(_bench_dist2d_smoke())
     pr = dict(tolerance=args.tolerance,
               wall_s=round(time.perf_counter() - t0, 2),
               benchmarks=benches)

@@ -1,0 +1,149 @@
+"""2-D partitioned MS-BFS: TEPS + bytes-exchanged-per-layer.
+
+Runs the 2-D grid engine (``repro.core.dist2d``) over forced host devices
+for a curve of grid shapes x wire formats, against the single-host
+pipelined engine as baseline. On one CPU the grid devices share cores, so
+the TEPS column measures the COST STRUCTURE of the 2-D formulation (two
+grid-axis exchanges per layer instead of one full allreduce), not real
+scaling. The second column is the one the decomposition exists for:
+**bytes exchanged per layer** — the dense wire format ships
+graph-proportional messages every layer, the compressed format ships
+frontier-proportional ones, and the headline ``xreduction`` point (dense
+bytes / compressed bytes, higher is better) gates that property in CI.
+
+  PYTHONPATH=src python benchmarks/dist2d_teps.py --scale 12
+  PYTHONPATH=src python benchmarks/dist2d_teps.py --smoke --json out.json
+
+XLA_FLAGS is set to force the needed host device count BEFORE jax loads;
+an inherited XLA_FLAGS with the flag already present wins.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def _force_devices(ndev: int) -> None:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={ndev}".strip())
+
+
+def run_curve(scale: int, edgefactor: int, grids, roots_curve, mode: str,
+              seed: int, lanes: int | None, validate: bool) -> dict:
+    """TEPS + per-layer byte points per (grid, R, wire format). Returns a
+    flat {label: value} dict (teps, bytes, and xreduction entries)."""
+    import numpy as np
+
+    from repro.core.dist2d import (dist2d_msbfs_engine_drain,
+                                   dist2d_msbfs_engine_enqueue,
+                                   dist2d_msbfs_engine_init,
+                                   dist2d_msbfs_engine_result, mesh2d,
+                                   partition_graph_2d)
+    from repro.core.msbfs import msbfs_pipelined
+    from repro.core.packed import adaptive_lane_pool
+    from repro.graph.generator import rmat_graph
+    from repro.graph.graph500 import sample_roots
+
+    g = rmat_graph(scale, edgefactor, seed)
+    print(f"# 2-D MS-BFS TEPS — scale={scale} ef={edgefactor} mode={mode} "
+          f"grids={list(grids)} R={list(roots_curve)} "
+          f"lanes={'auto' if not lanes else lanes}")
+    print(f"  n={g.n:,} vertices, m={g.m:,} directed edges")
+
+    points: dict[str, float] = {}
+    for r in roots_curve:
+        roots = sample_roots(g, r, seed=seed)
+        width = lanes or adaptive_lane_pool(r, g.n, g.m)
+        t0 = time.perf_counter()
+        base = msbfs_pipelined(g, roots, mode, lanes=width)
+        base.depth.block_until_ready()
+        t0 = time.perf_counter()
+        base = msbfs_pipelined(g, roots, mode, lanes=width)
+        base.depth.block_until_ready()
+        base_t = time.perf_counter() - t0
+        base_teps = float(np.sum(np.asarray(
+            base.edges_traversed, np.int64)) / 2) / base_t
+        points[f"host_R{r}"] = base_teps
+        print(f"  single-host      R={r:4d}: {base_teps / 1e6:8.2f} MTEPS")
+        for pr_, pc in grids:
+            dg = partition_graph_2d(g, pr_, pc)
+            mesh = mesh2d(pr_, pc)
+            fmt_bytes = {}
+            for compress, tag in ((False, "dense"), (True, "comp")):
+                def sweep():
+                    s = dist2d_msbfs_engine_init(dg, mesh, capacity=r,
+                                                 lanes=width)
+                    s = dist2d_msbfs_engine_enqueue(s, roots)
+                    return dist2d_msbfs_engine_drain(
+                        dg, s, mesh, mode, compress=compress)
+                s = sweep()                      # compile + correctness run
+                s.frontier.block_until_ready()
+                if validate:
+                    res = dist2d_msbfs_engine_result(dg, s, mesh)
+                    np.testing.assert_array_equal(np.asarray(res.depth),
+                                                  np.asarray(base.depth))
+                t0 = time.perf_counter()
+                s = sweep()
+                s.frontier.block_until_ready()
+                dt = time.perf_counter() - t0
+                layers = max(int(s.sweep_layers), 1)
+                total_bytes = int(s.exch_bytes)
+                bpl = total_bytes / layers
+                teps = float(np.sum(np.asarray(
+                    base.edges_traversed, np.int64)) / 2) / dt
+                fmt_bytes[tag] = total_bytes
+                label = f"g{pr_}x{pc}_R{r}"
+                points[f"{label}_{tag}"] = teps
+                points[f"{label}_{tag}_bytes_per_layer"] = bpl
+                rel = teps / max(base_teps, 1e-12)
+                print(f"  grid {pr_}x{pc} {tag:5s} R={r:4d}: "
+                      f"{teps / 1e6:8.2f} MTEPS ({rel:5.2f}x host), "
+                      f"{bpl / 1024:8.1f} KiB/layer over {layers} layers")
+            # the headline: exchange-volume reduction from compression
+            red = fmt_bytes["dense"] / max(fmt_bytes["comp"], 1)
+            points[f"g{pr_}x{pc}_R{r}_xreduction"] = red
+            print(f"  grid {pr_}x{pc} exchange volume: {red:5.2f}x less "
+                  f"compressed")
+    return points
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--edgefactor", type=int, default=16)
+    ap.add_argument("--grids", type=str, nargs="+",
+                    default=["1x2", "2x1", "2x2"],
+                    help="grid shapes as PRxPC")
+    ap.add_argument("--roots", type=int, nargs="+", default=[64, 256])
+    ap.add_argument("--mode", default="hybrid",
+                    choices=("hybrid", "topdown", "bottomup"))
+    ap.add_argument("--lanes", type=int, default=0,
+                    help="bit-lane pool; 0 = adaptive sizing")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--validate", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: scale 10, grid 2x2, R=64, validated")
+    ap.add_argument("--json", default=None,
+                    help="write {label: value} to this path")
+    args = ap.parse_args()
+    if args.smoke:
+        args.scale, args.grids, args.roots = 10, ["2x2"], [64]
+        args.validate = True
+    grids = [tuple(int(x) for x in s.split("x")) for s in args.grids]
+    _force_devices(max(pr_ * pc for pr_, pc in grids))
+
+    points = run_curve(args.scale, args.edgefactor, grids, args.roots,
+                       args.mode, args.seed, args.lanes or None,
+                       args.validate)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(points, f, indent=2, sort_keys=True)
+        print(f"  wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

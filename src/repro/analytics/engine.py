@@ -10,6 +10,10 @@ the host/distributed choice and the lane-pool sizing folded in:
   a 1-D partition, results trimmed back to the original vertex count, so
   callers see identical shapes either way (the engines are bit-identical
   per ``tests/test_dist_msbfs.py``);
+* ``grid=(pr, pc)`` — ``repro.core.dist2d`` over the 2-D adjacency
+  partition (``compress=True`` ships the per-layer exchanges through the
+  sparse frontier-word codec); bit-identical again, per
+  ``tests/test_dist2d.py``;
 * ``lanes=None`` — adaptive pool sizing per sweep
   (``packed.adaptive_lane_pool``), exactly the ``lanes=0`` surface of the
   graph500 / serve_bfs harnesses.
@@ -59,9 +63,11 @@ class LaneEngine:
     """Host- or mesh-backed MS-BFS sweep runner shared by all analytics."""
 
     def __init__(self, g: CSRGraph | WeightedCSRGraph, *, ndev: int = 1,
-                 mesh=None, lanes: int | None = None, mode: str = "hybrid",
-                 alpha: float = ALPHA_DEFAULT, beta: float = BETA_DEFAULT,
-                 max_pos: int = 8, probe_impl: str = "xla"):
+                 mesh=None, grid: tuple[int, int] | None = None,
+                 compress: bool = False, lanes: int | None = None,
+                 mode: str = "hybrid", alpha: float = ALPHA_DEFAULT,
+                 beta: float = BETA_DEFAULT, max_pos: int = 8,
+                 probe_impl: str = "xla"):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         self.wg = g if isinstance(g, WeightedCSRGraph) else None
@@ -74,6 +80,25 @@ class LaneEngine:
         self.max_pos = max_pos
         self.probe_impl = probe_impl
         self.mesh = mesh
+        self.grid = tuple(grid) if grid is not None else None
+        self.compress = compress
+        self.dg = self.dg2 = None
+        if self.grid is not None:
+            # 2-D adjacency partition on a (pr, pc) grid mesh
+            if mesh is not None:
+                raise ValueError(
+                    "pass grid=(pr, pc) OR a prebuilt mesh, not both — the "
+                    "2-D engine builds its own ('row', 'col') grid mesh")
+            from repro.core.dist2d import mesh2d, partition_graph_2d
+            pr, pc = self.grid
+            self.ndev = pr * pc
+            self.mesh = mesh2d(pr, pc)
+            self.dg2 = partition_graph_2d(g, pr, pc)
+            return
+        if compress:
+            raise ValueError(
+                "compress=True is the 2-D exchange knob — it needs "
+                "grid=(pr, pc); the 1-D engine's allreduce is always dense")
         if mesh is not None:
             ndev = int(np.prod(mesh.devices.shape))
         self.ndev = max(int(ndev), 1)
@@ -85,8 +110,6 @@ class LaneEngine:
             if self.mesh is None:
                 self.mesh = host_mesh(self.ndev)
             self.dg = partition_graph(g, self.ndev)
-        else:
-            self.dg = None
 
     @property
     def n(self) -> int:
@@ -114,6 +137,13 @@ class LaneEngine:
         if roots.size < 1:
             raise ValueError("need at least one root")
         lanes = self.lanes_for(roots.size)
+        if self.dg2 is not None:
+            from repro.core.dist2d import dist2d_msbfs
+            return dist2d_msbfs(self.dg2, roots, self.mesh, self.mode,
+                                self.alpha, self.beta, self.max_pos,
+                                self.probe_impl, lanes=lanes,
+                                compress=self.compress,
+                                derive_parents=derive_parents)
         if self.dg is not None:
             from repro.core.dist_msbfs import dist_msbfs
             return dist_msbfs(self.dg, roots, self.mesh, self.mode,
@@ -149,10 +179,11 @@ class LaneEngine:
                 "LaneEngine from a WeightedCSRGraph (e.g. "
                 "graph.generator.rmat_weighted_graph) to serve "
                 "sssp/weighted-closeness queries")
-        if self.dg is not None:
+        if self.dg is not None or self.dg2 is not None:
             raise NotImplementedError(
-                "distributed SSSP (the 1-D partition rung) is not built "
-                "yet — run weighted sweeps with ndev=1; see ROADMAP")
+                "distributed SSSP (the next ROADMAP rung: delta-stepping "
+                "over the shared exchange) is not built yet — run "
+                "weighted sweeps with ndev=1")
         from repro.traversal.sssp import sssp_pipelined
         roots = np.asarray(roots, np.int32).reshape(-1)
         if roots.size < 1:

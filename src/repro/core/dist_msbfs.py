@@ -52,6 +52,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import compat
 from repro.core.csr import CSRGraph
 from repro.core.dist_bfs import DistGraph, _flat_axis_index, partition_graph
+from repro.core.exchange import allreduce_or
 from repro.core.hybrid import ALPHA_DEFAULT, BETA_DEFAULT, MAX_TRACE
 from repro.core.msbfs import (MAX_LANES, MSBFSResult, msbfs_engine_enqueue,
                               msbfs_engine_idle)
@@ -67,18 +68,6 @@ __all__ = [
     "dist_msbfs_engine_result", "dist_msbfs_engine_step", "host_mesh",
     "partition_graph",
 ]
-
-
-def allreduce_or(words: jnp.ndarray, axes) -> jnp.ndarray:
-    """Bitwise-OR allreduce across mesh axes — the ``lax.psum`` analog for
-    packed lane words (OR is associative+commutative but not a psum, so
-    the collective is an all-gather of the per-device partials followed by
-    a static OR-fold of the device axis)."""
-    stacked = jax.lax.all_gather(words, axes)      # [ndev, ...]
-    out = stacked[0]
-    for d in range(1, stacked.shape[0]):
-        out = out | stacked[d]
-    return out
 
 
 class DistPipelineState(NamedTuple):

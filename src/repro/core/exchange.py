@@ -1,0 +1,135 @@
+"""Frontier-word exchange primitives shared by the distributed engines.
+
+Every distributed traversal in this repo moves exactly one kind of state
+between devices: packed lane words (``uint32``/``uint64`` bitmask columns,
+``repro.core.packed``). This module is the ONE implementation of those
+moves, so the 1-D engine (``repro.core.dist_msbfs``), the 2-D engine
+(``repro.core.dist2d``) and any future partition share a wire format,
+a compression rule, and a bytes-on-the-wire accounting:
+
+* ``allreduce_or`` — bitwise-OR allreduce over mesh axes: the
+  ``lax.psum`` analog for bitmasks (OR is associative+commutative but not
+  a sum, so the collective is an all-gather + static OR-fold). This is
+  the 1-D engine's whole exchange: each device ORs its placed row block
+  into the replicated ``[n, W]`` frontier.
+
+* ``gather_words`` — the transport both richer exchanges ride: all-gather
+  per-device word slices along ONE mesh axis, optionally through the
+  sparse (index, payload) codec of ``repro.distributed.compression``.
+  The sparse/dense switch is taken PER COLLECTIVE GROUP (the devices
+  being gathered agree via a pmax of their nonzero counts — a jit-safe
+  ``lax.cond`` whose branches hold the group's own collectives), and the
+  returned byte count follows the form actually shipped, so sparse
+  layers cost bytes proportional to the frontier population, not the
+  graph.
+
+* ``exchange_expand`` / ``exchange_reduce_or`` — the two moves of the
+  Buluc–Madduri 2-D decomposition: concatenate gathered slices into the
+  expand-side frontier (allgather along grid rows), or OR-fold gathered
+  partial products into the discovered set (reduce along grid columns).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import (DENSE_THRESHOLD, _COUNT_BYTES,
+                                           _IDX_BYTES, compress_words,
+                                           decompress_words, sparse_budget)
+
+__all__ = [
+    "allreduce_or", "exchange_expand", "exchange_reduce_or", "gather_words",
+    "sparse_budget",
+]
+
+
+def _or_fold(stacked: jnp.ndarray) -> jnp.ndarray:
+    """OR-fold a gathered ``[ndev, ...]`` stack along its device dim."""
+    out = stacked[0]
+    for d in range(1, stacked.shape[0]):
+        out = out | stacked[d]
+    return out
+
+
+def allreduce_or(words: jnp.ndarray, axes) -> jnp.ndarray:
+    """Bitwise-OR allreduce across mesh axes — the ``lax.psum`` analog for
+    packed lane words. Dense wire form; the 1-D engine's per-layer
+    frontier exchange (partition-agnostic: for a contiguous 1-D partition
+    it degenerates to an all-gather concatenation, but the OR form also
+    serves overlapping placements)."""
+    return _or_fold(jax.lax.all_gather(words, axes))
+
+
+def gather_words(own: jnp.ndarray, axis, compress: bool = False,
+                 threshold: float = DENSE_THRESHOLD):
+    """All-gather a per-device word slice along ``axis``.
+
+    Returns ``(stacked words[ndev, *own.shape], bytes int32)`` where
+    ``bytes`` is the total payload the group shipped this call (summed
+    over the group's devices, replicated within the group).
+
+    ``compress=False`` ships the dense slice. ``compress=True`` runs the
+    density switch: every device in the gather group compresses its slice
+    into a ``sparse_budget(total, threshold)``-slot buffer, the group
+    agrees on the max nonzero count (pmax along ``axis``), and if every
+    slice fits the budget the group gathers (index, payload) buffers and
+    decompresses — otherwise it falls back to the dense gather. One
+    ``lax.cond`` per group: different groups (e.g. different grid columns)
+    may take different branches, their collectives never cross.
+    """
+    itemsize = jnp.dtype(own.dtype).itemsize
+    total = 1
+    for s in own.shape:
+        total *= s
+    if not compress:
+        stacked = jax.lax.all_gather(own, axis)
+        ndev = stacked.shape[0]
+        return stacked, jnp.int32(ndev * total * itemsize)
+
+    budget = sparse_budget(total, threshold)
+    idx, payload, count = compress_words(own, budget)
+    count_max = jax.lax.pmax(count, axis)
+    use_sparse = count_max <= budget
+    # bytes follow the form the GROUP ships: all-sparse or all-dense
+    sparse_bytes = jax.lax.psum(
+        _COUNT_BYTES + count * (_IDX_BYTES + itemsize), axis)
+
+    def do_sparse(args):
+        idx, payload, _ = args
+        g_idx = jax.lax.all_gather(idx, axis)          # [ndev, budget]
+        g_pay = jax.lax.all_gather(payload, axis)
+        slices = [decompress_words(g_idx[d], g_pay[d], total)
+                  .reshape(own.shape) for d in range(g_idx.shape[0])]
+        return jnp.stack(slices, axis=0)
+
+    def do_dense(args):
+        _, _, own = args
+        return jax.lax.all_gather(own, axis)
+
+    stacked = jax.lax.cond(use_sparse, do_sparse, do_dense,
+                           (idx, payload, own))
+    ndev = stacked.shape[0]
+    nbytes = jnp.where(use_sparse, sparse_bytes,
+                       ndev * total * itemsize).astype(jnp.int32)
+    return stacked, nbytes
+
+
+def exchange_expand(own: jnp.ndarray, axis, compress: bool = False,
+                    threshold: float = DENSE_THRESHOLD):
+    """Expand-side exchange of the 2-D decomposition: gather the frontier
+    chunks owned by the devices along ``axis`` and concatenate them into
+    the group's full frontier slice (chunks are stacked in axis order —
+    the 2-D partition lays its column blocks out so this IS global
+    order). Returns ``(words[ndev * rows, W], bytes)``."""
+    stacked, nbytes = gather_words(own, axis, compress, threshold)
+    return stacked.reshape((-1,) + own.shape[1:]), nbytes
+
+
+def exchange_reduce_or(partial: jnp.ndarray, axis, compress: bool = False,
+                       threshold: float = DENSE_THRESHOLD):
+    """Reduce-side exchange of the 2-D decomposition: OR-fold the partial
+    new-frontier products of the devices along ``axis`` into the complete
+    discovered set (replicated within the group). Returns
+    ``(words like partial, bytes)``."""
+    stacked, nbytes = gather_words(partial, axis, compress, threshold)
+    return _or_fold(stacked), nbytes

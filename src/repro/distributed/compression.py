@@ -1,17 +1,120 @@
-"""Gradient compression: int8 quantised reduction with error feedback.
+"""Collective-payload compression: gradients (int8 + error feedback) and
+packed frontier words (sparse index+payload pairs).
 
-Wire format: per-tensor scale (f32) + int8 payload -> 4x less all-reduce
-traffic than f32, ~2x less than bf16. Error feedback keeps the residual
-(g - dequant(quant(g))) locally and adds it to the next step's gradient, so
-the compression bias telescopes away (Karimireddy et al., arXiv:1901.09847).
+Two wire formats live here:
 
-Used by the trainer when ``OptConfig.compress_grads`` is on; the dry-run
-measures its collective-term effect in §Perf.
+* **Gradients** — per-tensor scale (f32) + int8 payload -> 4x less
+  all-reduce traffic than f32, ~2x less than bf16. Error feedback keeps
+  the residual (g - dequant(quant(g))) locally and adds it to the next
+  step's gradient, so the compression bias telescopes away (Karimireddy
+  et al., arXiv:1901.09847). Used by the trainer when
+  ``OptConfig.compress_grads`` is on.
+
+* **Frontier words** — the 2-D MS-BFS exchange (``repro.core.dist2d``)
+  ships per-device frontier-word slices every layer, and sparse frontiers
+  are mostly zero words (a BFS spends most layers with a tiny fraction of
+  vertices active). ``compress_words`` packs the nonzero words of a slice
+  into (flat index, payload) pairs inside a fixed ``budget``-slot buffer —
+  static shapes, so the codec jits inside ``shard_map`` — and
+  ``decompress_words`` scatters them back. Pad slots carry
+  ``(idx=0, payload=0)``: a zero payload is the OR identity, so
+  decompression is exact whenever ``count <= budget`` (the engine falls
+  back to the dense form otherwise — see ``sparse_budget`` /
+  ``DENSE_THRESHOLD`` for the switch rule). With the sparse form chosen,
+  bytes on the wire scale with the *frontier population*, not the graph.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+__all__ = [
+    "DENSE_THRESHOLD", "compress_tree", "compress_words", "decompress_tree",
+    "decompress_words", "init_error_state", "psum_compressed",
+    "sparse_budget", "words_nnz", "wire_bytes",
+]
+
+# ---------------------------------------------------------------------------
+# Packed frontier-word compression (the 2-D exchange wire format).
+# ---------------------------------------------------------------------------
+
+# sparse form wins while at most this fraction of words is nonzero: each
+# sparse slot costs an int32 index + the word payload, so at itemsize 4
+# break-even is 50% density — 25% leaves margin for the count header and
+# keeps the switch conservative at 8-byte words too
+DENSE_THRESHOLD = 0.25
+
+_IDX_BYTES = 4      # int32 flat word index per sparse slot
+_COUNT_BYTES = 4    # int32 nonzero-count header per sparse message
+
+
+def sparse_budget(num_words: int, threshold: float = DENSE_THRESHOLD) -> int:
+    """Sparse-buffer slot count for a ``num_words``-word slice: the codec
+    carries at most ``floor(num_words * threshold)`` nonzero words (min 1).
+    A slice whose nonzero count exceeds this ships dense — exactly the
+    density switch the exchange applies per layer."""
+    if num_words < 1:
+        raise ValueError(f"need at least one word, got {num_words}")
+    return max(1, int(num_words * threshold))
+
+
+def words_nnz(words: jnp.ndarray) -> jnp.ndarray:
+    """Nonzero-word count of a word slice (any shape) — int32 scalar."""
+    return jnp.sum(words.reshape(-1) != 0, dtype=jnp.int32)
+
+
+def compress_words(words: jnp.ndarray, budget: int):
+    """Pack the nonzero words of ``words`` (any shape, flattened in row-
+    major order) into a ``budget``-slot sparse buffer.
+
+    Returns ``(idx int32[budget], payload word[budget], count int32)``:
+    the first ``min(count, budget)`` slots hold the flat indices and
+    values of the leading nonzero words in ascending index order; pad
+    slots hold ``(0, 0)`` — a zero payload ORs harmlessly, so the buffer
+    round-trips exactly iff ``count <= budget``. ``count`` is the TRUE
+    nonzero total (it may exceed ``budget``): callers switch to the dense
+    form when it does.
+    """
+    flat = words.reshape(-1)
+    total = flat.shape[0]
+    if budget < 1 or budget > total:
+        raise ValueError(
+            f"budget must be in [1, {total}], got {budget}")
+    nz = flat != 0
+    count = jnp.sum(nz, dtype=jnp.int32)
+    # nonzero indices first, ascending; zeros pushed past every real slot
+    pos = jnp.arange(total, dtype=jnp.int32)
+    order = jnp.argsort(jnp.where(nz, pos, total))
+    idx = order[:budget].astype(jnp.int32)
+    valid = jnp.arange(budget, dtype=jnp.int32) < count
+    idx = jnp.where(valid, idx, 0)
+    payload = jnp.where(valid, flat[idx], jnp.zeros((), flat.dtype))
+    return idx, payload, count
+
+
+def decompress_words(idx: jnp.ndarray, payload: jnp.ndarray, num_words: int,
+                     ) -> jnp.ndarray:
+    """Scatter a sparse buffer back into a flat ``num_words`` word array.
+
+    Pad slots (idx 0, payload 0) cannot clobber slot 0's real word: real
+    indices are unique and payloads unsigned, so a max-scatter IS the
+    OR-merge of each slot with the zero background."""
+    flat = jnp.zeros((num_words,), payload.dtype)
+    return flat.at[idx].max(payload)
+
+
+def wire_bytes(count, num_words: int, budget: int, itemsize: int):
+    """Bytes a slice costs on the wire under the density switch: the
+    sparse form (count header + index/payload pairs for the ``count``
+    nonzero words) while ``count <= budget``, the dense form (every word)
+    otherwise. ``count`` may be a traced scalar — the result then is too
+    (the engine accumulates it per layer)."""
+    sparse = _COUNT_BYTES + count * (_IDX_BYTES + itemsize)
+    dense = num_words * itemsize
+    if isinstance(count, jnp.ndarray):
+        # int32 like every other engine counter (x64-independent)
+        return jnp.where(count <= budget, sparse, dense).astype(jnp.int32)
+    return sparse if count <= budget else dense
 
 
 def init_error_state(grads):

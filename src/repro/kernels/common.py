@@ -19,6 +19,29 @@ def interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def split_u64_words(words: jnp.ndarray) -> jnp.ndarray:
+    """uint64[..., W] -> uint32[..., 2W] as interleaved (lo, hi) planes.
+
+    TPU Pallas has no 64-bit vector loads, so the u64 lane-word kernels
+    gather each 64-bit word as two 32-bit half-words instead: plane 2k is
+    word k's low half, plane 2k+1 its high half. Bitwise OR distributes
+    over the split, so any OR-accumulating kernel runs unchanged on the
+    half-planes (``merge_u64_words`` reassembles). Requires jax x64 —
+    enforced upstream by ``packed.word_dtype``.
+    """
+    lo = (words & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
+    hi = (words >> jnp.uint64(32)).astype(jnp.uint32)
+    return jnp.stack([lo, hi], axis=-1).reshape(
+        words.shape[:-1] + (2 * words.shape[-1],))
+
+
+def merge_u64_words(half_words: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of ``split_u64_words``: uint32[..., 2W] -> uint64[..., W]."""
+    pairs = half_words.reshape(half_words.shape[:-1] + (-1, 2))
+    return (pairs[..., 0].astype(jnp.uint64)
+            | (pairs[..., 1].astype(jnp.uint64) << jnp.uint64(32)))
+
+
 def pad_to(x: jnp.ndarray, multiple: int, axis: int = 0, value=0) -> jnp.ndarray:
     n = x.shape[axis]
     pad = (-n) % multiple

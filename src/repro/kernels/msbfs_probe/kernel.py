@@ -23,6 +23,19 @@ via BlockSpec (auto double-buffered) with the plane index as the outer
 grid dimension (each plane's frontier word column stays resident across
 its vertex tiles), while ``col_idx`` is held whole in VMEM. MAX_POS is
 statically unrolled.
+
+64-bit lane words (``LANE_WORD_BITS=64``) take the *u64 gather path*:
+TPU Pallas has no 64-bit vector loads, so each uint64 word column is
+split into interleaved (lo, hi) uint32 half-planes OUTSIDE the kernel
+(``common.split_u64_words``) and the unchanged uint32 kernel runs over
+2W half-planes; the accumulator halves are reassembled afterwards.
+Retirement then happens per HALF-plane rather than per 64-bit plane,
+which changes which *extra* bits are gathered but never which needed
+bits: a needed bit is found iff some live round's neighbour carries it,
+and a half-plane only retires once every one of its needed bits is
+already accumulated — so ``acc & need`` is retirement-granularity
+invariant (the engines mask exactly that way). ``msbfs_probe_ref``
+mirrors the split so kernel == ref bit-for-bit even unmasked.
 """
 from __future__ import annotations
 
@@ -32,7 +45,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import LANES, SUBLANES, TILE, cdiv
+from repro.kernels.common import (LANES, SUBLANES, TILE, cdiv,
+                                  merge_u64_words, split_u64_words)
 
 
 def _msbfs_probe_kernel(starts_ref, deg_ref, need_ref, col_ref, fp_ref,
@@ -70,11 +84,20 @@ def msbfs_probe_pallas(starts: jnp.ndarray, deg: jnp.ndarray,
     frontier (nf = global n), with ``col_idx`` holding global neighbour
     ids. Single-host callers pass nf == n. Both row counts are padded to a
     multiple of 1024 internally; W is a static grid dimension.
+
+    uint64[n, W] word planes are accepted under jax x64 (the
+    ``LANE_WORD_BITS=64`` engine configuration): each 64-bit word is
+    gathered as two 32-bit half-planes and reassembled — see the module
+    docstring for why ``acc & need`` is unaffected.
     """
     flat = need_words.ndim == 1
     if flat:
         need_words = need_words[:, None]
         frontier_words = frontier_words[:, None]
+    wide = need_words.dtype == jnp.uint64
+    if wide:
+        need_words = split_u64_words(need_words)
+        frontier_words = split_u64_words(frontier_words)
     n, w = need_words.shape
     nf = frontier_words.shape[0]
     m = col_idx.shape[0]
@@ -112,4 +135,6 @@ def msbfs_probe_pallas(starts: jnp.ndarray, deg: jnp.ndarray,
     )(starts2, deg2, need2, col_idx, fp)
 
     acc = acc.reshape(w, n_pad)[:, :n].T
+    if wide:
+        acc = merge_u64_words(acc)
     return acc[:, 0] if flat else acc

@@ -3,6 +3,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels.common import merge_u64_words, split_u64_words
+
 
 def msbfs_probe_ref(starts, deg, need_words, col_idx, frontier_words,
                     max_pos: int = 8):
@@ -10,11 +12,21 @@ def msbfs_probe_ref(starts, deg, need_words, col_idx, frontier_words,
     planes (or uint32[n] as W=1); ``frontier_words`` may have MORE rows
     than ``need_words`` (distributed local-block probe against the full
     replicated frontier). Retirement is per plane, elementwise — a plane
-    keeps gathering only while ITS need bits are unserved."""
+    keeps gathering only while ITS need bits are unserved.
+
+    uint64 planes mirror the kernel's u64 gather path exactly: split
+    into (lo, hi) uint32 half-planes, probe with per-HALF-plane
+    retirement, reassemble — so kernel == ref bit-for-bit at either
+    word width (``acc & need``, the only bits the engines consume, is
+    retirement-granularity invariant either way)."""
     flat = need_words.ndim == 1
     if flat:
         need_words = need_words[:, None]
         frontier_words = frontier_words[:, None]
+    wide = need_words.dtype == jnp.uint64
+    if wide:
+        need_words = split_u64_words(need_words)
+        frontier_words = split_u64_words(frontier_words)
     m = col_idx.shape[0]
     acc = jnp.zeros_like(need_words)
     for pos in range(max_pos):
@@ -23,4 +35,6 @@ def msbfs_probe_ref(starts, deg, need_words, col_idx, frontier_words,
         vadj = col_idx[idx]
         acc = acc | jnp.where(live, frontier_words[vadj],
                               jnp.zeros((), frontier_words.dtype))
+    if wide:
+        acc = merge_u64_words(acc)
     return acc[:, 0] if flat else acc

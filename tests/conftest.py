@@ -9,11 +9,19 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
 
-def run_in_subprocess(code: str, devices: int = 8, timeout: int = 600):
-    """Run python code in a fresh process with N fake host devices."""
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 600,
+                      env_extra: dict | None = None):
+    """Run python code in a fresh process with N fake host devices.
+
+    ``env_extra`` adds/overrides environment variables — the cross-width
+    parity tests use it to run the same code under LANE_WORD_BITS=64 +
+    JAX_ENABLE_X64=1 (both must be set BEFORE the first jax import, hence
+    a fresh process)."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if env_extra:
+        env.update({k: str(v) for k, v in env_extra.items()})
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True, timeout=timeout)
     assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"

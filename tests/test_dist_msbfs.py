@@ -97,9 +97,8 @@ print("DIST_MODES_OK")
 
 
 def test_dist_msbfs_forced_modes_and_pallas_probe():
-    if packed.LANE_WORD_BITS != 32:
-        pytest.skip("msbfs_probe kernel is uint32-only — the u64 gather "
-                    "path is the ROADMAP's next kernel rung")
+    # at LANE_WORD_BITS=64 the pallas leg takes the u64 gather path —
+    # no skip: the tier1-u64 CI leg runs this file end to end
     out = run_in_subprocess(MODES_CODE, devices=4)
     assert "DIST_MODES_OK" in out
 

@@ -132,3 +132,70 @@ def test_spmm_aggregate_exact_vs_dense():
         for u in ci[rp[v]:rp[v + 1]]:
             ref[v] += xs[u]
     np.testing.assert_allclose(np.asarray(y), ref, rtol=3e-5, atol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# u64 gather path: 64-bit lane words through the uint32 probe kernel
+# --------------------------------------------------------------------------
+
+def _require_x64():
+    if not jax.config.jax_enable_x64:
+        pytest.skip("u64 lane-word planes need jax x64 (JAX_ENABLE_X64=1 — "
+                    "the tier1-u64 CI leg runs these without skips)")
+
+
+def test_u64_split_merge_round_trip():
+    """split_u64_words/merge_u64_words are exact inverses and OR commutes
+    with the split — the identity the u64 gather path rests on."""
+    _require_x64()
+    from repro.kernels.common import merge_u64_words, split_u64_words
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 2 ** 64, (33, 3), dtype=np.uint64))
+    b = jnp.asarray(rng.integers(0, 2 ** 64, (33, 3), dtype=np.uint64))
+    assert split_u64_words(a).dtype == jnp.uint32
+    assert split_u64_words(a).shape == (33, 6)
+    np.testing.assert_array_equal(np.asarray(merge_u64_words(
+        split_u64_words(a))), np.asarray(a))
+    np.testing.assert_array_equal(
+        np.asarray(merge_u64_words(split_u64_words(a) | split_u64_words(b))),
+        np.asarray(a | b))
+
+
+@pytest.mark.parametrize("lane_words", [1, 2, 3])
+@pytest.mark.parametrize("max_pos", [1, 4, 8])
+def test_msbfs_probe_u64_lane_word_sweep(lane_words, max_pos):
+    """kernel == oracle at uint64[n, W] word planes (each plane gathered
+    as hi/lo uint32 half-planes): up to 192 roots per probe call."""
+    _require_x64()
+    g = rmat_graph(8, 4, seed=lane_words * 7 + max_pos)
+    rng = np.random.default_rng(lane_words * 70 + max_pos)
+    fro = jnp.asarray(rng.integers(0, 2 ** 64, (g.n, lane_words),
+                                   dtype=np.uint64))
+    need = jnp.asarray(rng.integers(0, 2 ** 64, (g.n, lane_words),
+                                    dtype=np.uint64))
+    a1 = msbfs_probe_pallas(g.row_ptr[:-1], g.deg, need, g.col_idx, fro,
+                            max_pos=max_pos, interpret=True)
+    a2 = msbfs_probe_ref(g.row_ptr[:-1], g.deg, need, g.col_idx, fro,
+                         max_pos=max_pos)
+    assert a1.dtype == jnp.uint64 and a1.shape == (g.n, lane_words)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_msbfs_probe_u64_matches_op_semantics():
+    """The masked probe result (acc & need) at u64 equals the 32-bit probe
+    run twice over the (lo, hi) word halves — the op-level contract the
+    engines consume is word-width invariant."""
+    _require_x64()
+    from repro.kernels.common import merge_u64_words, split_u64_words
+    g = rmat_graph(7, 6, seed=3)
+    rng = np.random.default_rng(3)
+    fro = jnp.asarray(rng.integers(0, 2 ** 64, (g.n, 2), dtype=np.uint64))
+    need = jnp.asarray(rng.integers(0, 2 ** 64, (g.n, 2), dtype=np.uint64))
+    wide = msbfs_probe_pallas(g.row_ptr[:-1], g.deg, need, g.col_idx, fro,
+                              max_pos=4, interpret=True) & need
+    halves = msbfs_probe_pallas(
+        g.row_ptr[:-1], g.deg, split_u64_words(need), g.col_idx,
+        split_u64_words(fro), max_pos=4,
+        interpret=True) & split_u64_words(need)
+    np.testing.assert_array_equal(np.asarray(wide),
+                                  np.asarray(merge_u64_words(halves)))

@@ -115,9 +115,9 @@ def test_msbfs_per_lane_trace_matches_serial(g_rmat):
 
 
 def test_msbfs_pallas_probe_end_to_end(g_rmat):
-    if packed.LANE_WORD_BITS != 32:
-        pytest.skip("msbfs_probe kernel is uint32-only — the u64 gather "
-                    "path is the ROADMAP's next kernel rung")
+    # runs at either LANE_WORD_BITS: 64-bit words take the kernel's u64
+    # gather path (hi/lo uint32 half-planes) — the tier1-u64 CI leg
+    # exercises this test with zero skips
     roots = sample_roots(g_rmat, 40, seed=4)
     out = msbfs(g_rmat, jnp.asarray(roots), "hybrid", 14.0, 24.0, 8,
                 "pallas")
@@ -286,10 +286,8 @@ def test_pipelined_forced_modes(g_rmat, mode):
 
 
 def test_pipelined_pallas_probe(g_rmat):
-    """R > MAX_LANES through the W-parametric Pallas probe kernel."""
-    if packed.LANE_WORD_BITS != 32:
-        pytest.skip("msbfs_probe kernel is uint32-only — the u64 gather "
-                    "path is the ROADMAP's next kernel rung")
+    """R > MAX_LANES through the W-parametric Pallas probe kernel (at
+    64-bit lane words this is the u64 gather path, W half-plane pairs)."""
     roots = sample_roots(g_rmat, 72, seed=14)
     out = msbfs_pipelined(g_rmat, jnp.asarray(roots), "hybrid",
                           probe_impl="pallas", lanes=64)
