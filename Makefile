@@ -13,6 +13,8 @@
 #                         TEPS-equivalent throughput on the lane engine
 #   make bench-sssp       weighted-path workloads (delta-stepping SSSP /
 #                         weighted closeness) on the tropical lane engine
+#   make bench-dist-sssp  sharded delta-stepping SSSP: TEPS-equivalents +
+#                         bytes-exchanged-per-step, dense vs compressed
 #   make ci-bench         fast benches -> BENCH_pr.json + regression gate
 #   make lint             ruff check + format check (rule set: ruff.toml)
 
@@ -20,7 +22,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-properties test-dist bench-smoke bench bench-dist \
-        bench-dist2d bench-analytics bench-sssp ci-bench lint
+        bench-dist2d bench-analytics bench-sssp bench-dist-sssp ci-bench lint
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -33,6 +35,7 @@ test-properties:
 test-dist:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 $(PYTHON) -m pytest \
 	    tests/test_dist_bfs.py tests/test_dist_msbfs.py tests/test_dist2d.py \
+	    tests/test_dist_sssp.py \
 	    tests/test_analytics.py::test_analytics_ndev2_parity -q
 
 bench-smoke:
@@ -52,6 +55,9 @@ bench-analytics:
 
 bench-sssp:
 	$(PYTHON) benchmarks/sssp_bench.py --scale 12
+
+bench-dist-sssp:
+	$(PYTHON) benchmarks/dist_sssp_teps.py --scale 12
 
 ci-bench:
 	$(PYTHON) benchmarks/ci_bench.py --out BENCH_pr.json \

@@ -15,7 +15,10 @@ Collects one higher-is-better throughput number per benchmark:
   single-device timings;
 * the 2-D grid smoke (``dist2d_teps.py --smoke``, same subprocess
   isolation): per-wire-format TEPS plus the exchange-volume reduction
-  ratio from frontier compression.
+  ratio from frontier compression;
+* the distributed SSSP smoke (``dist_sssp_teps.py --smoke``, same
+  isolation): the sharded delta-stepping engine's TEPS-equivalents per
+  wire format plus ITS exchange-volume reduction ratio.
 
 Gate: with ``--baseline BENCH_baseline.json``, exit 1 when any benchmark
 regresses more than ``--tolerance`` (default 25%) below its baseline
@@ -131,6 +134,33 @@ def _bench_dist2d_smoke() -> dict:
     return out
 
 
+def _bench_dist_sssp_smoke() -> dict:
+    """Distributed SSSP smoke (``dist_sssp_teps.py --smoke``):
+    TEPS-equivalents per wire format plus the exchange-volume
+    ``xreduction`` ratio. Raw ``bytes_per_step`` points are
+    lower-is-better and stay out of the gate — the ratio carries the
+    compression signal in gateable form."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        tmp = f.name
+    try:
+        subprocess.run(
+            [sys.executable, os.path.join(here, "dist_sssp_teps.py"),
+             "--smoke", "--json", tmp],
+            check=True, env=dict(os.environ), timeout=1800)
+        with open(tmp) as f:
+            points = json.load(f)
+    finally:
+        os.unlink(tmp)
+    out = {}
+    for k, v in points.items():
+        if k.endswith("_bytes_per_step"):
+            continue
+        unit = "ratio" if k.endswith("_xreduction") else "teps_equiv"
+        out[f"sssp_dist.{k}"] = dict(value=v, unit=unit)
+    return out
+
+
 def compare(pr: dict, baseline: dict, tolerance: float) -> list[str]:
     """Regressions worse than ``tolerance`` (fractional drop), as
     human-readable failure lines."""
@@ -170,6 +200,7 @@ def main() -> None:
     if not args.skip_dist:
         benches.update(_bench_dist_smoke())
         benches.update(_bench_dist2d_smoke())
+        benches.update(_bench_dist_sssp_smoke())
     pr = dict(tolerance=args.tolerance,
               wall_s=round(time.perf_counter() - t0, 2),
               benchmarks=benches)

@@ -1,0 +1,150 @@
+"""Distributed delta-stepping SSSP: TEPS-equivalents + bytes per step.
+
+Runs the 2-D grid SSSP engine (``repro.core.dist_sssp``) over forced
+host devices for a curve of grid shapes x wire formats, against the
+single-host pipelined engine as baseline. On one CPU the grid devices
+share cores, so the TEPS-equivalent column measures the COST STRUCTURE
+of the sharded formulation (an expand + a MIN-fold exchange per step
+instead of zero), not real scaling; the work numerator is the same fixed
+proxy as ``sssp_bench`` (R traversals x m/2 undirected edges). The
+second column is the one the MIN-monoid wire format exists for: **bytes
+exchanged per engine step** — dense value exchanges ship
+graph-proportional messages every step, compressed ones ship
+frontier-proportional messages (a relaxation candidate is ``inf``
+wherever no relaxation fired), and the headline ``xreduction`` point
+(dense bytes / compressed bytes, higher is better) gates that property
+in CI.
+
+  PYTHONPATH=src python benchmarks/dist_sssp_teps.py --scale 12
+  PYTHONPATH=src python benchmarks/dist_sssp_teps.py --smoke --json out.json
+
+XLA_FLAGS is set to force the needed host device count BEFORE jax loads;
+an inherited XLA_FLAGS with the flag already present wins.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def _force_devices(ndev: int) -> None:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={ndev}".strip())
+
+
+def run_curve(scale: int, edgefactor: int, grids, roots_curve, seed: int,
+              lanes: int, validate: bool) -> dict:
+    """TEPS-equivalent + per-step byte points per (grid, R, wire format).
+    Returns a flat {label: value} dict (teps, bytes, xreduction)."""
+    import numpy as np
+
+    from repro.core.dist_sssp import (dist2d_sssp_engine_drain,
+                                      dist2d_sssp_engine_enqueue,
+                                      dist2d_sssp_engine_init,
+                                      dist2d_sssp_engine_result, mesh2d,
+                                      partition_weighted_graph_2d)
+    from repro.graph.generator import rmat_weighted_graph, sample_roots
+    from repro.traversal.sssp import default_delta, sssp_pipelined
+
+    wg = rmat_weighted_graph(scale, edgefactor, seed)
+    delta = float(default_delta(wg))
+    print(f"# dist SSSP TEPS-equiv — scale={scale} ef={edgefactor} "
+          f"grids={list(grids)} R={list(roots_curve)} lanes={lanes} "
+          f"delta={delta:.4g}")
+    print(f"  n={wg.n:,} vertices, m={wg.m:,} directed edges")
+
+    points: dict[str, float] = {}
+    for r in roots_curve:
+        roots = sample_roots(wg, r, seed=seed)
+        width = max(1, min(lanes, r))
+        work = r * (wg.m // 2)               # fixed proxy, sssp_bench rule
+
+        def host_sweep():
+            return sssp_pipelined(wg, roots, delta=delta, lanes=width)
+        base = host_sweep()                  # compile
+        base.dist.block_until_ready()
+        t0 = time.perf_counter()
+        base = host_sweep()
+        base.dist.block_until_ready()
+        base_teps = work / (time.perf_counter() - t0)
+        points[f"host_R{r}"] = base_teps
+        print(f"  single-host      R={r:4d}: {base_teps / 1e6:8.2f} "
+              f"MTEPS-equiv")
+        for pr_, pc in grids:
+            dwg2 = partition_weighted_graph_2d(wg, pr_, pc)
+            mesh = mesh2d(pr_, pc)
+            fmt_bytes = {}
+            for compress, tag in ((False, "dense"), (True, "comp")):
+                def sweep():
+                    s = dist2d_sssp_engine_init(dwg2, mesh, capacity=r,
+                                                lanes=width)
+                    s = dist2d_sssp_engine_enqueue(s, roots)
+                    return dist2d_sssp_engine_drain(
+                        dwg2, s, mesh, delta, compress=compress)
+                s = sweep()                  # compile + correctness run
+                s.dist.block_until_ready()
+                if validate:
+                    res = dist2d_sssp_engine_result(dwg2, s)
+                    np.testing.assert_array_equal(np.asarray(res.dist),
+                                                  np.asarray(base.dist))
+                t0 = time.perf_counter()
+                s = sweep()
+                s.dist.block_until_ready()
+                dt = time.perf_counter() - t0
+                steps = max(int(s.sweep_steps), 1)
+                total_bytes = int(s.exch_bytes)
+                bps = total_bytes / steps
+                teps = work / dt
+                fmt_bytes[tag] = total_bytes
+                label = f"g{pr_}x{pc}_R{r}"
+                points[f"{label}_{tag}"] = teps
+                points[f"{label}_{tag}_bytes_per_step"] = bps
+                rel = teps / max(base_teps, 1e-12)
+                print(f"  grid {pr_}x{pc} {tag:5s} R={r:4d}: "
+                      f"{teps / 1e6:8.2f} MTEPS-equiv ({rel:5.2f}x host), "
+                      f"{bps / 1024:8.1f} KiB/step over {steps} steps")
+            # the headline: exchange-volume reduction from compression
+            red = fmt_bytes["dense"] / max(fmt_bytes["comp"], 1)
+            points[f"g{pr_}x{pc}_R{r}_xreduction"] = red
+            print(f"  grid {pr_}x{pc} exchange volume: {red:5.2f}x less "
+                  f"compressed")
+    return points
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--edgefactor", type=int, default=16)
+    ap.add_argument("--grids", type=str, nargs="+",
+                    default=["1x2", "2x1", "2x2"],
+                    help="grid shapes as PRxPC")
+    ap.add_argument("--roots", type=int, nargs="+", default=[32, 64])
+    ap.add_argument("--lanes", type=int, default=32,
+                    help="dense tropical lane pool per sweep")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--validate", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: scale 10, grid 2x2, R=32, validated")
+    ap.add_argument("--json", default=None,
+                    help="write {label: value} to this path")
+    args = ap.parse_args()
+    if args.smoke:
+        args.scale, args.grids, args.roots = 10, ["2x2"], [32]
+        args.validate = True
+    grids = [tuple(int(x) for x in s.split("x")) for s in args.grids]
+    _force_devices(max(pr_ * pc for pr_, pc in grids))
+
+    points = run_curve(args.scale, args.edgefactor, grids, args.roots,
+                       args.seed, args.lanes, args.validate)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(points, f, indent=2, sort_keys=True)
+        print(f"  wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -83,6 +83,7 @@ class LaneEngine:
         self.grid = tuple(grid) if grid is not None else None
         self.compress = compress
         self.dg = self.dg2 = None
+        self.dwg = self.dwg2 = None
         if self.grid is not None:
             # 2-D adjacency partition on a (pr, pc) grid mesh
             if mesh is not None:
@@ -94,6 +95,9 @@ class LaneEngine:
             self.ndev = pr * pc
             self.mesh = mesh2d(pr, pc)
             self.dg2 = partition_graph_2d(g, pr, pc)
+            if self.wg is not None:
+                from repro.core.dist_sssp import partition_weighted_graph_2d
+                self.dwg2 = partition_weighted_graph_2d(self.wg, pr, pc)
             return
         if compress:
             raise ValueError(
@@ -110,6 +114,9 @@ class LaneEngine:
             if self.mesh is None:
                 self.mesh = host_mesh(self.ndev)
             self.dg = partition_graph(g, self.ndev)
+            if self.wg is not None:
+                from repro.core.dist_sssp import partition_weighted_graph
+                self.dwg = partition_weighted_graph(self.wg, self.ndev)
 
     @property
     def n(self) -> int:
@@ -168,28 +175,42 @@ class LaneEngine:
         cap = min(self.lanes, DEFAULT_LANES) if self.lanes else DEFAULT_LANES
         return max(1, min(num_roots, cap))
 
-    def sssp_sweep(self, roots, delta: float | None = None):
+    def sssp_sweep(self, roots, delta=None):
         """One pipelined delta-stepping sweep over the engine's weighted
         graph; returns ``repro.traversal.sssp.SSSPResult`` (``dist`` is
-        [n, R] float32, inf unreached). Requires the engine to have been
-        built from a ``WeightedCSRGraph``."""
+        [n, R] float32 with the original vertex count, inf unreached).
+        Requires the engine to have been built from a
+        ``WeightedCSRGraph``. Dispatches on the engine's partition
+        exactly like ``sweep``: host lanes at ndev 1, the 1-D sharded
+        engine on a mesh, the 2-D grid engine under ``grid=(pr, pc)``
+        (``compress=True`` ships the per-step value exchanges through the
+        sparse codec) — all bit-identical per ``tests/test_dist_sssp.py``.
+        ``delta`` is a scalar width or a per-lane tuple (the engines'
+        static knob; None picks the graph default)."""
         if self.wg is None:
             raise TypeError(
                 "weighted sweep on an unweighted engine — build the "
                 "LaneEngine from a WeightedCSRGraph (e.g. "
                 "graph.generator.rmat_weighted_graph) to serve "
                 "sssp/weighted-closeness queries")
-        if self.dg is not None or self.dg2 is not None:
-            raise NotImplementedError(
-                "distributed SSSP (the next ROADMAP rung: delta-stepping "
-                "over the shared exchange) is not built yet — run "
-                "weighted sweeps with ndev=1")
-        from repro.traversal.sssp import sssp_pipelined
         roots = np.asarray(roots, np.int32).reshape(-1)
         if roots.size < 1:
             raise ValueError("need at least one source")
+        lanes = self.sssp_lanes_for(roots.size)
+        if self.dwg2 is not None:
+            from repro.core.dist_sssp import dist2d_sssp
+            return dist2d_sssp(self.dwg2, roots, self.mesh, delta=delta,
+                               lanes=lanes, max_pos=self.max_pos,
+                               relax_impl=self.probe_impl,
+                               compress=self.compress)
+        if self.dwg is not None:
+            from repro.core.dist_sssp import dist_sssp
+            return dist_sssp(self.dwg, roots, self.mesh, delta=delta,
+                             lanes=lanes, max_pos=self.max_pos,
+                             relax_impl=self.probe_impl)
+        from repro.traversal.sssp import sssp_pipelined
         return sssp_pipelined(self.wg, roots, delta=delta,
-                              lanes=self.sssp_lanes_for(roots.size),
+                              lanes=lanes,
                               max_pos=self.max_pos,
                               relax_impl=self.probe_impl)
 

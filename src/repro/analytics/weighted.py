@@ -35,7 +35,7 @@ __all__ = ["SSSPDistancesResult", "sssp_distances",
 class SSSPDistancesResult:
     sources: np.ndarray          # int32[S]
     dist: np.ndarray             # float32[n, S], inf unreached
-    delta: float                 # bucket width the sweep ran with
+    delta: float | tuple         # bucket width(s) the sweep ran with
     steps: np.ndarray            # int32[S] engine steps per source lane
     truncated: np.ndarray        # bool[S] — lane hit the step cap: its
     #                              column is a partial relaxation
@@ -52,36 +52,54 @@ class SSSPDistancesResult:
         return np.asarray(self.dist, np.float64)[targets].T
 
 
-def _resolve_delta(eng, delta: float | None) -> float | None:
+def _resolve_delta(eng, delta) -> float | tuple | None:
     """Pin ``delta=None`` to the graph default ONCE per workload call —
     the engine would otherwise recompute it (a host copy of all m
     weights) inside every chunk sweep, and the recorded metadata would
-    not name the width actually used."""
-    if delta is not None or not eng.weighted:
+    not name the width actually used. ``delta="adaptive"`` runs the
+    weight-histogram rule (``traversal.sssp.adaptive_delta``): on bimodal
+    weights it widens the bucket past the light/heavy gap — fewer settle
+    steps, identical distances (any positive width is exact at fixpoint).
+    A scalar or per-lane tuple passes through unchanged."""
+    if not eng.weighted:
         return delta              # unweighted: let sssp_sweep raise
-    from repro.traversal.sssp import default_delta
-    return float(default_delta(eng.wg))
+    if delta is None:
+        from repro.traversal.sssp import default_delta
+        return float(default_delta(eng.wg))
+    if isinstance(delta, str):
+        if delta != "adaptive":
+            raise ValueError(
+                f"delta must be None, 'adaptive', a scalar, or a "
+                f"per-lane tuple — got {delta!r}")
+        from repro.traversal.sssp import adaptive_delta
+        return float(adaptive_delta(eng.wg))
+    return delta
 
 
-def sssp_distances(g_or_engine, sources, delta: float | None = None,
+def sssp_distances(g_or_engine, sources, delta=None,
                    **engine_kwargs) -> SSSPDistancesResult:
     """Shortest-path distances from each source, one pipelined
-    delta-stepping sweep. ``delta=None`` picks the engine default
-    (``traversal.sssp.default_delta``)."""
+    delta-stepping sweep — on whatever partition the engine was built
+    with (host, 1-D mesh, or 2-D grid; distances are bit-identical).
+    ``delta=None`` picks the engine default
+    (``traversal.sssp.default_delta``); ``delta="adaptive"`` the
+    weight-histogram width; a per-lane tuple hands each lane its own."""
     eng = as_engine(g_or_engine, **engine_kwargs)
     delta = _resolve_delta(eng, delta)
     sources = np.asarray(sources, np.int32).reshape(-1)
     res = eng.sssp_sweep(sources, delta=delta)
     return SSSPDistancesResult(
-        sources=sources, dist=np.asarray(res.dist), delta=float(delta),
+        sources=sources, dist=np.asarray(res.dist),
+        delta=delta if isinstance(delta, tuple) else float(delta),
         steps=np.asarray(res.steps),
-        truncated=np.asarray(res.truncated), meta=dict(ndev=eng.ndev))
+        truncated=np.asarray(res.truncated),
+        meta=dict(ndev=eng.ndev, grid=eng.grid, compress=eng.compress))
 
 
 def weighted_closeness_centrality(g_or_engine,
                                   sources: int | str | None = "auto",
                                   seed: int = 0, chunk: int = 64,
-                                  delta: float | None = None,
+                                  delta=None,
                                   **engine_kwargs) -> ClosenessResult:
     """Weighted closeness centrality of every vertex — the unweighted
     estimator with SSSP distances standing in for BFS depths.

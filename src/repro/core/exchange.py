@@ -34,12 +34,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.compression import (DENSE_THRESHOLD, _COUNT_BYTES,
-                                           _IDX_BYTES, compress_words,
+                                           _IDX_BYTES, compress_values,
+                                           compress_words, decompress_values,
                                            decompress_words, sparse_budget)
 
 __all__ = [
-    "allreduce_or", "exchange_expand", "exchange_reduce_or", "gather_words",
-    "sparse_budget",
+    "allreduce_min", "allreduce_or", "exchange_expand",
+    "exchange_expand_values", "exchange_reduce_min", "exchange_reduce_or",
+    "gather_values", "gather_words", "sparse_budget",
 ]
 
 
@@ -58,6 +60,26 @@ def allreduce_or(words: jnp.ndarray, axes) -> jnp.ndarray:
     it degenerates to an all-gather concatenation, but the OR form also
     serves overlapping placements)."""
     return _or_fold(jax.lax.all_gather(words, axes))
+
+
+def _min_fold(stacked: jnp.ndarray) -> jnp.ndarray:
+    """MIN-fold a gathered ``[ndev, ...]`` stack along its device dim."""
+    out = stacked[0]
+    for d in range(1, stacked.shape[0]):
+        out = jnp.minimum(out, stacked[d])
+    return out
+
+
+def allreduce_min(vals: jnp.ndarray, axes) -> jnp.ndarray:
+    """Elementwise-MIN allreduce across mesh axes — the tropical-semiring
+    sibling of ``allreduce_or``. Float lane values fold under ``min``
+    exactly as packed words fold under OR: ``inf`` is the identity, so
+    settled/inactive lanes (which carry ``inf`` candidates) are a no-op in
+    the fold. Dense wire form; float32 ``min`` is exactly associative and
+    commutative absent NaN (the SSSP engines never produce one: weights
+    are non-negative finite or ``inf`` and ``inf + finite = inf``), so the
+    fold order cannot perturb bits."""
+    return _min_fold(jax.lax.all_gather(vals, axes))
 
 
 def gather_words(own: jnp.ndarray, axis, compress: bool = False,
@@ -114,6 +136,55 @@ def gather_words(own: jnp.ndarray, axis, compress: bool = False,
     return stacked, nbytes
 
 
+def gather_values(own: jnp.ndarray, axis, compress: bool = False,
+                  threshold: float = DENSE_THRESHOLD):
+    """All-gather a per-device float value slice along ``axis`` — the
+    value-transport twin of ``gather_words`` for MIN-monoid exchanges.
+
+    Returns ``(stacked vals[ndev, *own.shape], bytes int32)``. The dense
+    form is population-blind (every entry ships every call); with
+    ``compress=True`` the density switch runs on the FINITE-entry count —
+    relaxation candidates are ``inf`` everywhere a relaxation did not fire
+    this step, so sparse layers cost bytes proportional to the active
+    frontier, not the graph. Same group-consensus rule as the word path:
+    pmax of counts along ``axis``, one ``lax.cond`` per gather group.
+    """
+    itemsize = jnp.dtype(own.dtype).itemsize
+    total = 1
+    for s in own.shape:
+        total *= s
+    if not compress:
+        stacked = jax.lax.all_gather(own, axis)
+        ndev = stacked.shape[0]
+        return stacked, jnp.int32(ndev * total * itemsize)
+
+    budget = sparse_budget(total, threshold)
+    idx, payload, count = compress_values(own, budget)
+    count_max = jax.lax.pmax(count, axis)
+    use_sparse = count_max <= budget
+    sparse_bytes = jax.lax.psum(
+        _COUNT_BYTES + count * (_IDX_BYTES + itemsize), axis)
+
+    def do_sparse(args):
+        idx, payload, _ = args
+        g_idx = jax.lax.all_gather(idx, axis)          # [ndev, budget]
+        g_pay = jax.lax.all_gather(payload, axis)
+        slices = [decompress_values(g_idx[d], g_pay[d], total)
+                  .reshape(own.shape) for d in range(g_idx.shape[0])]
+        return jnp.stack(slices, axis=0)
+
+    def do_dense(args):
+        _, _, own = args
+        return jax.lax.all_gather(own, axis)
+
+    stacked = jax.lax.cond(use_sparse, do_sparse, do_dense,
+                           (idx, payload, own))
+    ndev = stacked.shape[0]
+    nbytes = jnp.where(use_sparse, sparse_bytes,
+                       ndev * total * itemsize).astype(jnp.int32)
+    return stacked, nbytes
+
+
 def exchange_expand(own: jnp.ndarray, axis, compress: bool = False,
                     threshold: float = DENSE_THRESHOLD):
     """Expand-side exchange of the 2-D decomposition: gather the frontier
@@ -133,3 +204,24 @@ def exchange_reduce_or(partial: jnp.ndarray, axis, compress: bool = False,
     ``(words like partial, bytes)``."""
     stacked, nbytes = gather_words(partial, axis, compress, threshold)
     return _or_fold(stacked), nbytes
+
+
+def exchange_expand_values(own: jnp.ndarray, axis, compress: bool = False,
+                           threshold: float = DENSE_THRESHOLD):
+    """Expand-side value exchange of the 2-D decomposition: gather the
+    distance chunks owned by the devices along ``axis`` and concatenate
+    them into the group's full value slice (chunks stack in axis order —
+    the 2-D partition's column-local layout). Returns
+    ``(vals[ndev * rows, L], bytes)``."""
+    stacked, nbytes = gather_values(own, axis, compress, threshold)
+    return stacked.reshape((-1,) + own.shape[1:]), nbytes
+
+
+def exchange_reduce_min(partial: jnp.ndarray, axis, compress: bool = False,
+                        threshold: float = DENSE_THRESHOLD):
+    """Reduce-side value exchange: MIN-fold the partial relaxation
+    candidates of the devices along ``axis`` into the complete candidate
+    set (replicated within the group). Returns
+    ``(vals like partial, bytes)``."""
+    stacked, nbytes = gather_values(partial, axis, compress, threshold)
+    return _min_fold(stacked), nbytes

@@ -29,9 +29,10 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
-    "DENSE_THRESHOLD", "compress_tree", "compress_words", "decompress_tree",
-    "decompress_words", "init_error_state", "psum_compressed",
-    "sparse_budget", "words_nnz", "wire_bytes",
+    "DENSE_THRESHOLD", "compress_tree", "compress_values", "compress_words",
+    "decompress_tree", "decompress_values", "decompress_words",
+    "init_error_state", "psum_compressed", "sparse_budget", "values_finite",
+    "words_nnz", "wire_bytes",
 ]
 
 # ---------------------------------------------------------------------------
@@ -115,6 +116,53 @@ def wire_bytes(count, num_words: int, budget: int, itemsize: int):
         # int32 like every other engine counter (x64-independent)
         return jnp.where(count <= budget, sparse, dense).astype(jnp.int32)
     return sparse if count <= budget else dense
+
+
+def values_finite(vals: jnp.ndarray) -> jnp.ndarray:
+    """Finite-entry count of a float value slice (any shape) — int32
+    scalar. The value-codec analog of ``words_nnz``: ``inf`` is the MIN
+    identity, so finite entries are the only payload worth shipping."""
+    return jnp.sum(jnp.isfinite(vals.reshape(-1)), dtype=jnp.int32)
+
+
+def compress_values(vals: jnp.ndarray, budget: int):
+    """Pack the FINITE entries of a float value slice (any shape,
+    flattened row-major) into a ``budget``-slot sparse buffer.
+
+    The float twin of ``compress_words`` for MIN-monoid exchanges
+    (distributed SSSP): a lane value is "empty" when it is ``inf`` — the
+    min identity — exactly as a zero word is empty under OR. Returns
+    ``(idx int32[budget], payload[budget], count int32)`` with pad slots
+    carrying ``(idx=0, payload=inf)``; an inf payload min-scatters
+    harmlessly, so the buffer round-trips exactly iff ``count <= budget``.
+    ``count`` is the TRUE finite total (may exceed ``budget``): callers
+    switch to the dense form when it does.
+    """
+    flat = vals.reshape(-1)
+    total = flat.shape[0]
+    if budget < 1 or budget > total:
+        raise ValueError(
+            f"budget must be in [1, {total}], got {budget}")
+    fin = jnp.isfinite(flat)
+    count = jnp.sum(fin, dtype=jnp.int32)
+    pos = jnp.arange(total, dtype=jnp.int32)
+    order = jnp.argsort(jnp.where(fin, pos, total))
+    idx = order[:budget].astype(jnp.int32)
+    valid = jnp.arange(budget, dtype=jnp.int32) < count
+    idx = jnp.where(valid, idx, 0)
+    payload = jnp.where(valid, flat[idx], jnp.full((), jnp.inf, flat.dtype))
+    return idx, payload, count
+
+
+def decompress_values(idx: jnp.ndarray, payload: jnp.ndarray,
+                      num_values: int) -> jnp.ndarray:
+    """Scatter a sparse value buffer back onto the all-``inf`` background.
+
+    Pad slots (idx 0, payload inf) cannot clobber slot 0's real value:
+    a min-scatter against ``inf`` IS the MIN-merge of each slot with the
+    empty background."""
+    flat = jnp.full((num_values,), jnp.inf, payload.dtype)
+    return flat.at[idx].min(payload)
 
 
 def init_error_state(grads):

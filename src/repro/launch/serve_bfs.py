@@ -163,6 +163,39 @@ def _engine(g, mode: str, probe_impl: str, ndev: int):
     )
 
 
+def _sssp_engine(wg: WeightedCSRGraph, probe_impl: str, ndev: int,
+                 delta):
+    """(init, enqueue, step, idle, result) for the tropical engine —
+    the weighted mirror of ``_engine``: ndev<=1 runs the host
+    delta-stepping engine, ndev>1 the 1-D sharded ``dist_sssp`` over the
+    shared exchange (bit-identical per ``tests/test_dist_sssp.py``, so
+    the serving answers cannot depend on the partition)."""
+    if ndev <= 1:
+        from repro.traversal.sssp import (sssp_engine_enqueue,
+                                          sssp_engine_idle,
+                                          sssp_engine_init,
+                                          sssp_engine_result,
+                                          sssp_engine_step)
+        return (
+            lambda cap, lanes: sssp_engine_init(wg, cap, lanes),
+            sssp_engine_enqueue,
+            lambda s: sssp_engine_step(wg, s, delta, 8, probe_impl),
+            sssp_engine_idle,
+            sssp_engine_result,
+        )
+    from repro.core import dist_sssp as ds
+    mesh = ds.host_mesh(ndev)
+    dwg = ds.partition_weighted_graph(wg, ndev)
+    return (
+        lambda cap, lanes: ds.dist_sssp_engine_init(dwg, mesh, cap, lanes),
+        ds.dist_sssp_engine_enqueue,
+        lambda s: ds.dist_sssp_engine_step(dwg, s, mesh, delta, 8,
+                                           probe_impl),
+        ds.dist_sssp_engine_idle,
+        lambda s: ds.dist_sssp_engine_result(dwg, s),
+    )
+
+
 def _sojourn_stats(sojourn: np.ndarray) -> dict:
     return dict(
         mean=float(sojourn.mean()), p50=float(np.percentile(sojourn, 50)),
@@ -233,9 +266,10 @@ def serve(g, requests: list[Request], lanes: int, burst: int, every: int,
     engine; ``sssp`` requests ride the delta-stepping tropical engine,
     stepped in the SAME loop iteration so both share the arrival schedule
     and the layer clock. ``lanes=0`` picks the packed pool width
-    adaptively; ``ndev>1`` shards the packed engine (sssp requests then
-    require ndev=1 — distributed SSSP is a ROADMAP rung); ``delta=None``
-    uses the weighted graph's default bucket width."""
+    adaptively; ``ndev>1`` shards BOTH engines over the same device pool
+    (the packed one via ``dist_msbfs``, the tropical one via
+    ``dist_sssp`` — answers are bit-identical to the host engines);
+    ``delta=None`` uses the weighted graph's default bucket width."""
     wg = g if isinstance(g, WeightedCSRGraph) else None
     if wg is not None:
         g = wg.csr
@@ -250,10 +284,6 @@ def serve(g, requests: list[Request], lanes: int, burst: int, every: int,
         raise ValueError("sssp requests need a WeightedCSRGraph — "
                          "generate the serving graph with "
                          "rmat_weighted_graph")
-    if sssp_reqs and ndev > 1:
-        raise NotImplementedError(
-            "distributed SSSP (the 1-D partition rung) is not built yet "
-            "— serve sssp mixes with --ndev 1; see ROADMAP")
     bool_cap = int(sum(r.roots.size for r in requests
                        if r.qtype != "sssp"))
     sssp_cap = int(sum(r.roots.size for r in sssp_reqs))
@@ -266,19 +296,13 @@ def serve(g, requests: list[Request], lanes: int, burst: int, every: int,
             g, mode, probe_impl, ndev)
         state = eng_init(bool_cap, lanes)
     if sssp_cap:
-        from repro.traversal.sssp import (DEFAULT_LANES, default_delta,
-                                          sssp_engine_enqueue,
-                                          sssp_engine_idle,
-                                          sssp_engine_init,
-                                          sssp_engine_result,
-                                          sssp_engine_step)
+        from repro.traversal.sssp import DEFAULT_LANES, default_delta
         if delta is None:
             delta = default_delta(wg)
         sssp_lanes = max(1, min(lanes, sssp_cap, DEFAULT_LANES))
-        sstate = sssp_engine_init(wg, sssp_cap, sssp_lanes)
-
-        def sssp_step(s):
-            return sssp_engine_step(wg, s, float(delta), 8, probe_impl)
+        (sssp_init, sssp_enqueue, sssp_step, sssp_idle,
+         sssp_result) = _sssp_engine(wg, probe_impl, ndev, float(delta))
+        sstate = sssp_init(sssp_cap, sssp_lanes)
 
     arrival = np.full(num_req, -1, np.int64)   # layer the request arrived
     answered = np.full(num_req, -1, np.int64)  # layer it was fully answered
@@ -292,7 +316,7 @@ def serve(g, requests: list[Request], lanes: int, burst: int, every: int,
             req.slots = slice(slot_hi[kind], slot_hi[kind] + req.roots.size)
             slot_hi[kind] += req.roots.size
             if kind == "sssp":
-                ss = sssp_engine_enqueue(ss, req.roots)
+                ss = sssp_enqueue(ss, req.roots)
             else:
                 s = eng_enqueue(s, req.roots)
         arrival[lo:hi] = layer
@@ -307,7 +331,7 @@ def serve(g, requests: list[Request], lanes: int, burst: int, every: int,
             eng_step(eng_enqueue(state, first.roots[:1])).out_depth)
     if sssp_cap:
         jax.block_until_ready(sssp_step(
-            sssp_engine_enqueue(sstate, sssp_reqs[0].roots[:1])).out_dist)
+            sssp_enqueue(sstate, sssp_reqs[0].roots[:1])).out_dist)
 
     state, sstate = enqueue(state, sstate, 0, min(burst, num_req), 0)
     fed = min(burst, num_req)
@@ -315,13 +339,13 @@ def serve(g, requests: list[Request], lanes: int, burst: int, every: int,
 
     def all_idle():
         return ((state is None or eng_idle(state))
-                and (sstate is None or sssp_engine_idle(sstate)))
+                and (sstate is None or sssp_idle(sstate)))
 
     t0 = time.perf_counter()
     while fed < num_req or not all_idle():
         if state is not None and not eng_idle(state):
             state = eng_step(state)
-        if sstate is not None and not sssp_engine_idle(sstate):
+        if sstate is not None and not sssp_idle(sstate):
             sstate = sssp_step(sstate)
         layer += 1
         occ = 0
@@ -357,7 +381,7 @@ def serve(g, requests: list[Request], lanes: int, burst: int, every: int,
         depth = np.asarray(out.depth)
         edges = int(np.asarray(out.edges_traversed).sum()) // 2
     if sstate is not None:
-        sssp_res = sssp_engine_result(sstate)
+        sssp_res = sssp_result(sstate)
     if validate and state is not None:
         from repro.core.csr import to_numpy_adj
         rp, ci = to_numpy_adj(g)

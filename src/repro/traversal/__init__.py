@@ -16,25 +16,29 @@ first weighted workload family on top:
 * ``ref``       — host NumPy Dijkstra oracle for the property suites.
 
 Downstream: ``repro.analytics`` serves ``SSSPQuery`` /
-``WeightedClosenessQuery`` over this engine, and
+``WeightedClosenessQuery`` over this engine,
 ``repro.launch.serve_bfs`` mixes ``sssp``-tagged requests into its
-serving loop.
+serving loop, and ``repro.core.dist_sssp`` shards the engine over the
+1-D and 2-D device partitions through the MIN-monoid surface of the
+shared exchange (bit-identical on every partition shape).
 """
 from repro.traversal.ref import dijkstra_reference, to_numpy_weighted
 from repro.traversal.semiring import (BOOLEAN, PLUS_TIMES, SEMIRINGS,
                                       Semiring, TROPICAL, segment_reduce,
                                       semiring_spmv, tropical_relax)
-from repro.traversal.sssp import (DEFAULT_LANES, MAX_SSSP_STEPS, SSSPResult,
+from repro.traversal.sssp import (DEFAULT_LANES, MAX_SSSP_STEPS,
+                                  MAX_SSSP_TRACE, SSSPResult, adaptive_delta,
                                   default_delta, sssp_engine_drain,
                                   sssp_engine_enqueue, sssp_engine_idle,
                                   sssp_engine_init, sssp_engine_result,
                                   sssp_engine_step, sssp_pipelined)
 
 __all__ = [
-    "BOOLEAN", "DEFAULT_LANES", "MAX_SSSP_STEPS", "PLUS_TIMES", "SEMIRINGS",
-    "SSSPResult", "Semiring", "TROPICAL", "default_delta",
-    "dijkstra_reference", "segment_reduce", "semiring_spmv",
-    "sssp_engine_drain", "sssp_engine_enqueue", "sssp_engine_idle",
-    "sssp_engine_init", "sssp_engine_result", "sssp_engine_step",
-    "sssp_pipelined", "to_numpy_weighted", "tropical_relax",
+    "BOOLEAN", "DEFAULT_LANES", "MAX_SSSP_STEPS", "MAX_SSSP_TRACE",
+    "PLUS_TIMES", "SEMIRINGS", "SSSPResult", "Semiring", "TROPICAL",
+    "adaptive_delta", "default_delta", "dijkstra_reference",
+    "segment_reduce", "semiring_spmv", "sssp_engine_drain",
+    "sssp_engine_enqueue", "sssp_engine_idle", "sssp_engine_init",
+    "sssp_engine_result", "sssp_engine_step", "sssp_pipelined",
+    "to_numpy_weighted", "tropical_relax",
 ]

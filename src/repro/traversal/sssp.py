@@ -48,10 +48,10 @@ from repro.core.packed import queue_claims
 from repro.traversal.semiring import INF, tropical_relax
 
 __all__ = [
-    "DEFAULT_LANES", "MAX_SSSP_STEPS", "SSSPResult", "default_delta",
-    "sssp_engine_drain", "sssp_engine_enqueue", "sssp_engine_idle",
-    "sssp_engine_init", "sssp_engine_result", "sssp_engine_step",
-    "sssp_pipelined",
+    "DEFAULT_LANES", "MAX_SSSP_STEPS", "MAX_SSSP_TRACE", "SSSPResult",
+    "adaptive_delta", "default_delta", "sssp_engine_drain",
+    "sssp_engine_enqueue", "sssp_engine_idle", "sssp_engine_init",
+    "sssp_engine_result", "sssp_engine_step", "sssp_pipelined",
 ]
 
 # dense float lanes cost 32x the state of packed bit lanes — the default
@@ -63,6 +63,11 @@ DEFAULT_LANES = 32
 # workloads finish in O(buckets + light rounds) << this
 MAX_SSSP_STEPS = 4096
 
+# per-lane bucket/phase trace depth: rows are engine steps (clipped —
+# steps past the buffer overwrite the last row identically on the host
+# and distributed engines, so traces stay bit-comparable either way)
+MAX_SSSP_TRACE = 256
+
 
 class SSSPResult(NamedTuple):
     sources: jnp.ndarray       # int32[R] root vertex per lane
@@ -70,6 +75,10 @@ class SSSPResult(NamedTuple):
     steps: jnp.ndarray         # int32[R] engine steps the lane ran
     truncated: jnp.ndarray     # bool[R] — lane hit max_steps; dist is a
     #                            PARTIAL relaxation, not shortest paths
+    trace_bucket: jnp.ndarray  # int32[MAX_SSSP_TRACE, R] bucket per step
+    #                            (-1 = lane idle / step never ran)
+    trace_phase: jnp.ndarray   # int32[MAX_SSSP_TRACE, R] 0 light-iterate,
+    #                            1 heavy-settle, -1 idle
 
     def reached(self) -> jnp.ndarray:
         """bool[n, R] — vertices with a finite distance per lane."""
@@ -96,6 +105,8 @@ class SSSPState(NamedTuple):
     out_dist: jnp.ndarray      # float32[n, capacity+1] (+1 = trash column)
     out_steps: jnp.ndarray     # int32[capacity+1]  0 = unanswered
     out_truncated: jnp.ndarray  # bool[capacity+1]  lane flushed by the cap
+    trace_bucket: jnp.ndarray  # int32[MAX_SSSP_TRACE, capacity+1]
+    trace_phase: jnp.ndarray   # int32[MAX_SSSP_TRACE, capacity+1]
 
     @property
     def num_lanes(self) -> int:
@@ -118,6 +129,62 @@ def default_delta(wg: WeightedCSRGraph) -> float:
     avg_deg = wg.m / max(wg.n, 1)
     delta = w_max / max(avg_deg, 1.0)
     return delta if delta > 0 else 1.0
+
+
+def adaptive_delta(wg: WeightedCSRGraph, lanes: int | None = None):
+    """Bucket width from the weight HISTOGRAM, not just the range.
+
+    ``default_delta`` is one global ``max_w / avg_deg`` width — on a
+    bimodal weight distribution (many light local edges + a heavy long-
+    haul mode, the classic road-network/R-MAT-with-tiers shape) that
+    width lands inside the light mode, so every heavy edge spans many
+    buckets and the settle phase walks them one by one. This rule finds
+    the dominant gap in the log-weight histogram and, when a real
+    light/heavy split exists (gap >= 4x, both modes carrying >= 5% of the
+    edges), widens delta to the geometric midpoint of the gap: light
+    edges stay light (few intra-bucket iterations), heavy edges cross in
+    one hop (far fewer buckets). Unimodal weights see no gap and fall
+    back to ``default_delta`` unchanged. Distances are delta-invariant —
+    any positive width yields exact shortest paths at fixpoint — so the
+    knob only moves step/bucket counts.
+
+    With ``lanes`` the width is broadcast to a ``lanes``-tuple: the engine
+    accepts per-lane deltas (a static tuple), so callers with per-source
+    heuristics can hand different sources different widths.
+    """
+    base = default_delta(wg)
+    w = np.asarray(wg.weights, np.float64).reshape(-1)
+    w = w[np.isfinite(w) & (w > 0)]
+    delta = base
+    if w.size >= 2:
+        logw = np.sort(np.log(w))
+        gaps = np.diff(logw)
+        k = int(np.argmax(gaps))
+        heavy_frac = (logw.size - (k + 1)) / logw.size
+        light_frac = (k + 1) / logw.size
+        if (gaps[k] >= np.log(4.0) and heavy_frac >= 0.05
+                and light_frac >= 0.05):
+            mid = float(np.exp((logw[k] + logw[k + 1]) / 2.0))
+            delta = max(base, mid)
+    if lanes is None:
+        return float(delta)
+    return (float(delta),) * lanes
+
+
+def _delta_lanes(delta, lanes: int) -> jnp.ndarray:
+    """Per-lane bucket widths [L] from a scalar or a lanes-length tuple."""
+    if isinstance(delta, tuple):
+        if len(delta) != lanes:
+            raise ValueError(
+                f"per-lane delta needs {lanes} entries, got {len(delta)}")
+        return jnp.asarray(delta, jnp.float32)
+    return jnp.full((lanes,), jnp.float32(delta))
+
+
+def _check_delta(delta) -> None:
+    vals = delta if isinstance(delta, tuple) else (delta,)
+    if len(vals) == 0 or not all(v > 0 for v in vals):
+        raise ValueError(f"delta must be > 0, got {delta}")
 
 
 def sssp_engine_init(wg: WeightedCSRGraph, capacity: int,
@@ -143,6 +210,8 @@ def sssp_engine_init(wg: WeightedCSRGraph, capacity: int,
         out_dist=jnp.full((n, cap + 1), jnp.inf, jnp.float32),
         out_steps=jnp.zeros((cap + 1,), jnp.int32),
         out_truncated=jnp.zeros((cap + 1,), jnp.bool_),
+        trace_bucket=jnp.full((MAX_SSSP_TRACE, cap + 1), -1, jnp.int32),
+        trace_phase=jnp.full((MAX_SSSP_TRACE, cap + 1), -1, jnp.int32),
     )
 
 
@@ -206,7 +275,7 @@ def _phase_relax(g, sel: jnp.ndarray, dist: jnp.ndarray,
                         lambda dist: jnp.full_like(dist, jnp.inf), dist)
 
 
-def _sssp_body(wg: WeightedCSRGraph, s: SSSPState, delta: float,
+def _sssp_body(wg: WeightedCSRGraph, s: SSSPState, delta,
                max_pos: int, relax_impl: str,
                max_steps: int) -> SSSPState:
     """One engine step: refill idle lanes, run the light/heavy phase each
@@ -215,7 +284,7 @@ def _sssp_body(wg: WeightedCSRGraph, s: SSSPState, delta: float,
     cap = s.capacity
     s = _refill(wg, s)
 
-    d32 = jnp.float32(delta)
+    d32 = _delta_lanes(delta, s.num_lanes)                    # [L]
     active = s.lane_qidx < cap
     # membership is CEILING-ONLY (dist < (b+1)*delta, no lower bound):
     # already-settled vertices re-enter the mask but their re-relaxations
@@ -232,12 +301,31 @@ def _sssp_body(wg: WeightedCSRGraph, s: SSSPState, delta: float,
     iterating = light_pending.any(axis=0)                     # bool[L]
     settling = active & ~iterating
 
-    light_w = jnp.where(wg.weights <= d32, wg.weights, INF)
-    heavy_w = jnp.where(wg.weights > d32, wg.weights, INF)
-    cand_light = _phase_relax(g, light_pending & iterating[None, :],
-                              s.dist, light_w, max_pos, relax_impl)
-    cand_heavy = _phase_relax(g, in_bucket & settling[None, :],
-                              s.dist, heavy_w, max_pos, relax_impl)
+    # the light/heavy edge split depends on the lane's OWN delta, but the
+    # weight masks are per-edge (shared across lanes) — so lanes are
+    # grouped by DISTINCT width and each group runs its own masked relax
+    # pair, min-folded into the shared candidates. A scalar delta is one
+    # group with an all-lanes selector: the exact relaxations of the
+    # single-width engine, bit for bit.
+    cand_light = jnp.full_like(s.dist, jnp.inf)
+    cand_heavy = jnp.full_like(s.dist, jnp.inf)
+    widths = (sorted(set(delta)) if isinstance(delta, tuple)
+              else [float(delta)])
+    lane_widths = (delta if isinstance(delta, tuple)
+                   else (float(delta),) * s.num_lanes)
+    for dv in widths:
+        gsel = jnp.asarray([lw == dv for lw in lane_widths], jnp.bool_)
+        dv32 = jnp.float32(dv)
+        light_w = jnp.where(wg.weights <= dv32, wg.weights, INF)
+        heavy_w = jnp.where(wg.weights > dv32, wg.weights, INF)
+        g_light = _phase_relax(
+            g, light_pending & (iterating & gsel)[None, :],
+            s.dist, light_w, max_pos, relax_impl)
+        g_heavy = _phase_relax(
+            g, in_bucket & (settling & gsel)[None, :],
+            s.dist, heavy_w, max_pos, relax_impl)
+        cand_light = jnp.minimum(cand_light, g_light)
+        cand_heavy = jnp.minimum(cand_heavy, g_heavy)
 
     new_dist = jnp.minimum(s.dist, jnp.minimum(cand_light, cand_heavy))
     changed = new_dist < s.dist
@@ -265,6 +353,16 @@ def _sssp_body(wg: WeightedCSRGraph, s: SSSPState, delta: float,
     capped = active & (lane_steps2 >= max_steps) & ~exhausted
     finished = exhausted | capped
 
+    # bucket/phase trace: one row per engine step of the lane's root
+    # (clipped to the buffer — overwrites land identically everywhere),
+    # written to the lane's OUTPUT column so finished traces persist
+    tr_row = jnp.clip(s.lane_steps, 0, MAX_SSSP_TRACE - 1)
+    tr_col = jnp.where(active, s.lane_qidx, cap)
+    trace_bucket = s.trace_bucket.at[tr_row, tr_col].set(
+        jnp.where(active, s.lane_bucket, -1))
+    trace_phase = s.trace_phase.at[tr_row, tr_col].set(
+        jnp.where(active, jnp.where(iterating, 0, 1), -1).astype(jnp.int32))
+
     fcol = jnp.where(finished, s.lane_qidx, cap)
     out_dist = s.out_dist.at[:, fcol].set(new_dist)
     out_steps = s.out_steps.at[fcol].set(lane_steps2)
@@ -279,26 +377,27 @@ def _sssp_body(wg: WeightedCSRGraph, s: SSSPState, delta: float,
         sweep_steps=s.sweep_steps + 1,
         out_dist=out_dist, out_steps=out_steps,
         out_truncated=out_truncated,
+        trace_bucket=trace_bucket, trace_phase=trace_phase,
     )
 
 
 @partial(jax.jit, static_argnums=(2, 3, 4, 5))
-def sssp_engine_step(wg: WeightedCSRGraph, state: SSSPState, delta: float,
+def sssp_engine_step(wg: WeightedCSRGraph, state: SSSPState, delta,
                      max_pos: int = 8, relax_impl: str = "xla",
                      max_steps: int = MAX_SSSP_STEPS) -> SSSPState:
     """Advance the SSSP engine by one phase step (streaming API).
 
-    Compiles once per (graph shape, lanes, capacity, delta); the serving
-    loop interleaves ``sssp_engine_enqueue`` between steps to feed idle
-    lanes mid-sweep, exactly like the MS-BFS engine it mirrors.
+    ``delta`` is a scalar bucket width or a per-lane tuple (static either
+    way). Compiles once per (graph shape, lanes, capacity, delta); the
+    serving loop interleaves ``sssp_engine_enqueue`` between steps to
+    feed idle lanes mid-sweep, exactly like the MS-BFS engine it mirrors.
     """
-    if not delta > 0:
-        raise ValueError(f"delta must be > 0, got {delta}")
+    _check_delta(delta)
     return _sssp_body(wg, state, delta, max_pos, relax_impl, max_steps)
 
 
 @partial(jax.jit, static_argnums=(2, 3, 4, 5))
-def _drain(wg: WeightedCSRGraph, state: SSSPState, delta: float,
+def _drain(wg: WeightedCSRGraph, state: SSSPState, delta,
            max_pos: int, relax_impl: str, max_steps: int) -> SSSPState:
     cap = state.queue.shape[0]
 
@@ -311,12 +410,11 @@ def _drain(wg: WeightedCSRGraph, state: SSSPState, delta: float,
     return jax.lax.while_loop(cond_fn, body_fn, state)
 
 
-def sssp_engine_drain(wg: WeightedCSRGraph, state: SSSPState, delta: float,
+def sssp_engine_drain(wg: WeightedCSRGraph, state: SSSPState, delta,
                       max_pos: int = 8, relax_impl: str = "xla",
                       max_steps: int = MAX_SSSP_STEPS) -> SSSPState:
     """Step the engine until every enqueued source has been answered."""
-    if not delta > 0:
-        raise ValueError(f"delta must be > 0, got {delta}")
+    _check_delta(delta)
     return _drain(wg, state, delta, max_pos, relax_impl, max_steps)
 
 
@@ -330,10 +428,12 @@ def sssp_engine_result(state: SSSPState) -> SSSPResult:
     return SSSPResult(sources=state.queue[:r],
                       dist=state.out_dist[:, :r],
                       steps=state.out_steps[:r],
-                      truncated=state.out_truncated[:r])
+                      truncated=state.out_truncated[:r],
+                      trace_bucket=state.trace_bucket[:, :r],
+                      trace_phase=state.trace_phase[:, :r])
 
 
-def sssp_pipelined(wg: WeightedCSRGraph, roots, delta: float | None = None,
+def sssp_pipelined(wg: WeightedCSRGraph, roots, delta=None,
                    lanes: int = DEFAULT_LANES, max_pos: int = 8,
                    relax_impl: str = "xla",
                    max_steps: int = MAX_SSSP_STEPS) -> SSSPResult:
@@ -342,7 +442,8 @@ def sssp_pipelined(wg: WeightedCSRGraph, roots, delta: float | None = None,
     Sources beyond the lane pool wait in the pending queue and stream
     into lanes as they free up — no barrier between lane generations, so
     a many-bucket source never stalls shallow ones. ``delta=None`` picks
-    ``default_delta(wg)``.
+    ``default_delta(wg)``; a per-lane tuple (length == the effective lane
+    count) hands each lane its own bucket width.
     """
     roots = jnp.asarray(roots, jnp.int32).reshape(-1)
     num_roots = roots.shape[0]
@@ -351,8 +452,9 @@ def sssp_pipelined(wg: WeightedCSRGraph, roots, delta: float | None = None,
     if delta is None:
         delta = default_delta(wg)
     lanes = max(1, min(lanes, num_roots))
+    delta = delta if isinstance(delta, tuple) else float(delta)
     state = sssp_engine_init(wg, capacity=num_roots, lanes=lanes)
     state = sssp_engine_enqueue(state, roots)
-    state = sssp_engine_drain(wg, state, float(delta), max_pos, relax_impl,
+    state = sssp_engine_drain(wg, state, delta, max_pos, relax_impl,
                               max_steps)
     return sssp_engine_result(state)

@@ -23,6 +23,10 @@ import pytest
 from conftest import run_in_subprocess
 
 U64_ENV = {"LANE_WORD_BITS": "64", "JAX_ENABLE_X64": "1"}
+# the u32 leg pins its env too: under the tier1-u64 CI job every
+# subprocess inherits LANE_WORD_BITS=64, so the W=32 assertion only
+# holds if the default width is forced back explicitly
+U32_ENV = {"LANE_WORD_BITS": "32", "JAX_ENABLE_X64": "0"}
 
 
 # --------------------------------------------------------------------------
@@ -68,7 +72,8 @@ print("W=%d MATRIX_OK" % packed.LANE_WORD_BITS)
 
 
 def test_dist2d_parity_matrix():
-    out = run_in_subprocess(MATRIX_CODE, devices=4, timeout=900)
+    out = run_in_subprocess(MATRIX_CODE, devices=4, timeout=900,
+                            env_extra=U32_ENV)
     assert "W=32 MATRIX_OK" in out
 
 
@@ -116,7 +121,8 @@ print("W=%d MODES2D_OK" % packed.LANE_WORD_BITS)
 
 
 def test_dist2d_forced_modes_and_pallas_probe():
-    out = run_in_subprocess(MODES_CODE, devices=4, timeout=900)
+    out = run_in_subprocess(MODES_CODE, devices=4, timeout=900,
+                            env_extra=U32_ENV)
     assert "W=32 MODES2D_OK" in out
 
 

@@ -157,3 +157,155 @@ def test_isolated_source_answers_immediately():
     ref = dijkstra_reference(rp, ci, w, 0)
     np.testing.assert_allclose(np.asarray(res.dist[:5, 1]), ref[:5],
                                atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# distributed leg: the sharded engines fuzzed against the same oracle
+# ---------------------------------------------------------------------------
+
+DIST_PROP_CODE = """
+import os
+import sys
+sys.path.insert(0, "tests")
+import numpy as np
+from repro.core.dist_sssp import (dist2d_sssp, dist_sssp, host_mesh,
+                                  mesh2d, partition_weighted_graph,
+                                  partition_weighted_graph_2d)
+from repro.traversal import dijkstra_reference, to_numpy_weighted
+from test_sssp_properties import build_case
+
+MESH1 = host_mesh(2)
+MESH2 = mesh2d(2, 1)
+
+
+def check(n, m, seed, shape, weight_model, dup_edges):
+    wg, sources, delta = build_case(n, m, seed, shape, weight_model,
+                                    dup_edges)
+    lanes = max(1, len(sources) // 2)
+    compress = bool(seed % 2)                 # both wire formats fuzzed
+    if seed % 3 == 0:                         # both partition shapes too
+        res = dist2d_sssp(partition_weighted_graph_2d(wg, 2, 1), sources,
+                          MESH2, delta=delta, lanes=lanes,
+                          compress=compress)
+    else:
+        res = dist_sssp(partition_weighted_graph(wg, 2), sources, MESH1,
+                        delta=delta, lanes=lanes, compress=compress)
+    rp, ci, w = to_numpy_weighted(wg)
+    for i, r in enumerate(sources):
+        ref = dijkstra_reference(rp, ci, w, int(r))
+        got = np.asarray(res.dist[:, i], np.float64)
+        assert (np.isfinite(got) == np.isfinite(ref)).all(), (
+            "reached set", seed, shape, weight_model, i)
+        fin = np.isfinite(ref)
+        np.testing.assert_allclose(got[fin], ref[fin], atol=1e-4)
+
+
+# deterministic floor: zero weights, disconnected graphs, duplicate
+# edges, adversarial deltas -- always runs, hypothesis or not
+CASES = [
+    (24, 60, 1, "random", "with_zeros", True),
+    (48, 30, 2, "random", "uniform", False),
+    (24, 0, 3, "star", "integer", False),
+    (24, 0, 5, "path", "unit", False),
+    (48, 80, 6, "two_components", "uniform", False),
+]
+for c in CASES:
+    check(*c)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    print("DIST_PROP_OK hypothesis=0")
+else:
+    maxe = min(int(os.environ.get("MSBFS_PROP_EXAMPLES", "10")), 6)
+
+    @settings(max_examples=maxe, deadline=None, derandomize=True)
+    @given(st.sampled_from((24, 48)), st.integers(0, 160),
+           st.integers(0, 10 ** 6),
+           st.sampled_from(("random", "star", "path", "two_components")),
+           st.sampled_from(("uniform", "unit", "with_zeros", "integer")),
+           st.booleans())
+    def inner(n, m, seed, shape, weight_model, dup_edges):
+        check(n, m, seed, shape, weight_model, dup_edges)
+
+    inner()
+    print("DIST_PROP_OK hypothesis=1")
+"""
+
+
+def test_property_sssp_distributed():
+    """The sharded delta-stepping engines (1-D and 2-D, dense and
+    compressed wire) fuzzed against the Dijkstra oracle under 2 forced
+    host devices — the distributed twin of the host property sweep."""
+    from conftest import run_in_subprocess
+    out = run_in_subprocess(DIST_PROP_CODE, devices=2, timeout=900)
+    assert "DIST_PROP_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# adaptive delta: the weight-histogram rule
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_delta_reduces_buckets_on_bimodal_rmat():
+    """On an R-MAT graph with bimodal weights (many light edges + a heavy
+    long-haul tier) the histogram rule widens delta past the gap: far
+    fewer settle steps and buckets, bit-identical distances (any positive
+    width is exact at fixpoint)."""
+    from repro.graph.generator import rmat_edges
+    from repro.traversal.sssp import adaptive_delta, default_delta
+
+    src, dst, n = rmat_edges(6, 24, seed=2)
+    rng = np.random.default_rng(2)
+    m = len(src)
+    w = np.where(rng.random(m) < 0.85,
+                 rng.uniform(0.5, 1.0, m), rng.uniform(50.0, 55.0, m))
+    wg = from_weighted_edges(src, dst, w, n)
+    base = default_delta(wg)
+    wide = adaptive_delta(wg)
+    assert wide > 4 * base        # the rule found the light/heavy gap
+
+    sources = [1, 2, 5, 9, 17, 33]
+    r0 = sssp_pipelined(wg, sources, delta=base, lanes=3)
+    r1 = sssp_pipelined(wg, sources, delta=wide, lanes=3)
+    assert np.array_equal(np.asarray(r0.dist), np.asarray(r1.dist))
+    assert not np.asarray(r1.truncated).any()
+
+    def settle_steps(r):
+        return int((np.asarray(r.trace_phase) == 1).sum())
+
+    # measured on this seed: 24 -> 12 settle steps, max bucket 45 -> 7
+    assert 2 * settle_steps(r1) <= settle_steps(r0)
+    assert (np.asarray(r1.trace_bucket).max()
+            < np.asarray(r0.trace_bucket).max())
+
+
+def test_adaptive_delta_unimodal_falls_back_and_broadcasts():
+    """Unimodal weights show no dominant gap: the rule returns
+    ``default_delta`` unchanged; ``lanes=k`` broadcasts to a k-tuple."""
+    from repro.traversal.sssp import adaptive_delta, default_delta
+
+    wg, _, _ = build_case(40, 120, 0, "random", "uniform", False)
+    base = default_delta(wg)
+    assert adaptive_delta(wg) == base
+    assert adaptive_delta(wg, lanes=4) == (base,) * 4
+
+
+def test_per_lane_tuple_delta_matches_scalar_lanes():
+    """A per-lane delta tuple runs each lane exactly as a scalar run
+    with that width would: lane columns are independent (every bucket
+    decision is columnwise), so the batched run is bit-equal per lane."""
+    wg, sources, _ = build_case(40, 120, 8, "random", "uniform", False)
+    sources = np.asarray(sources[:2], np.int32)
+    widths = (0.25, 2.0)
+    both = sssp_pipelined(wg, sources, delta=widths, lanes=2)
+    for i, d in enumerate(widths):
+        solo = sssp_pipelined(wg, sources[i:i + 1], delta=d, lanes=1)
+        assert np.array_equal(np.asarray(both.dist[:, i]),
+                              np.asarray(solo.dist[:, 0])), i
+        assert int(both.steps[i]) == int(solo.steps[0]), i
+        assert np.array_equal(np.asarray(both.trace_bucket[:, i]),
+                              np.asarray(solo.trace_bucket[:, 0])), i
+        assert np.array_equal(np.asarray(both.trace_phase[:, i]),
+                              np.asarray(solo.trace_phase[:, 0])), i

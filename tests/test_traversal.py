@@ -378,14 +378,21 @@ def test_weighted_query_on_unweighted_engine_raises(wg_rmat):
         sssp_distances(eng, [0])
 
 
-def test_weighted_query_on_dist_engine_names_roadmap_rung(wg_rmat):
+def test_weighted_sweep_on_dist_engine_matches_host(wg_rmat):
     eng = LaneEngine(wg_rmat, mesh=None, ndev=1)
     assert eng.weighted
-    # a mesh-backed engine must refuse weighted sweeps with direction
+    # a mesh-backed engine used to refuse weighted sweeps; the sharded
+    # delta-stepping engine now serves them bit-identically (the full
+    # multi-device matrix lives in tests/test_dist_sssp.py — this pins
+    # the dispatch itself on the in-process single-device mesh)
     from repro.core.dist_msbfs import host_mesh
     deng = LaneEngine(wg_rmat, mesh=host_mesh(1))
-    with pytest.raises(NotImplementedError, match="ROADMAP"):
-        deng.sssp_sweep([0])
+    assert deng.dwg is not None
+    want = eng.sssp_sweep([0, 3, 7])
+    got = deng.sssp_sweep([0, 3, 7])
+    for f in ("sources", "dist", "steps", "truncated"):
+        assert np.array_equal(np.asarray(getattr(got, f)),
+                              np.asarray(getattr(want, f))), f
 
 
 # ---------------------------------------------------------------------------
