@@ -15,6 +15,8 @@
 #                         weighted closeness) on the tropical lane engine
 #   make bench-dist-sssp  sharded delta-stepping SSSP: TEPS-equivalents +
 #                         bytes-exchanged-per-step, dense vs compressed
+#   make bench-serve      AnalyticsService replay: streamed-vs-flush trace,
+#                         mix TEPS + p50/p99 sojourn + early-answer gain
 #   make ci-bench         fast benches -> BENCH_pr.json + regression gate
 #   make lint             ruff check + format check (rule set: ruff.toml)
 
@@ -22,7 +24,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-properties test-dist bench-smoke bench bench-dist \
-        bench-dist2d bench-analytics bench-sssp bench-dist-sssp ci-bench lint
+        bench-dist2d bench-analytics bench-sssp bench-dist-sssp \
+        bench-serve ci-bench lint
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -36,7 +39,8 @@ test-dist:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 $(PYTHON) -m pytest \
 	    tests/test_dist_bfs.py tests/test_dist_msbfs.py tests/test_dist2d.py \
 	    tests/test_dist_sssp.py \
-	    tests/test_analytics.py::test_analytics_ndev2_parity -q
+	    tests/test_analytics.py::test_analytics_ndev2_parity \
+	    tests/test_serving.py::test_serving_dist_streaming_parity -q
 
 bench-smoke:
 	$(PYTHON) benchmarks/msbfs_teps.py --scale 10
@@ -58,6 +62,9 @@ bench-sssp:
 
 bench-dist-sssp:
 	$(PYTHON) benchmarks/dist_sssp_teps.py --scale 12
+
+bench-serve:
+	$(PYTHON) benchmarks/serve_bench.py --scale 12
 
 ci-bench:
 	$(PYTHON) benchmarks/ci_bench.py --out BENCH_pr.json \

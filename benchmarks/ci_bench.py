@@ -10,6 +10,11 @@ Collects one higher-is-better throughput number per benchmark:
   the lane engine, ``analytics_bench.bench_points`` at scale 10);
 * the weighted-path smoke (delta-stepping SSSP / unit-weight anchor /
   weighted closeness, ``sssp_bench.bench_points`` at scale 10);
+* the serving smoke (``serve_bench.bench_points`` at scale 10): a
+  replayed mixed-workload trace through ``AnalyticsService`` — mix TEPS,
+  answered-early fraction, and the khop layers saved by the streaming
+  read-outs gate; p50/p99 sojourn layers are recorded as derived
+  metadata;
 * the distributed MS-BFS smoke (``dist_msbfs_teps.py --smoke``), run in a
   subprocess so the forced host-device count never leaks into the
   single-device timings;
@@ -88,6 +93,29 @@ def _bench_sssp(scale: int = 10) -> dict:
     from benchmarks.sssp_bench import bench_points
     return {f"sssp.{k}": dict(value=v, unit="teps_equiv")
             for k, v in bench_points(scale).items()}
+
+
+def _bench_serve_smoke() -> dict:
+    """Serving smoke (``serve_bench.bench_points`` at scale 10): one
+    mixed bfs/khop/reach/closeness/sssp trace replayed through
+    ``AnalyticsService`` with streaming read-outs on vs off. Gates the
+    aggregate mix TEPS, the answered-early fraction, and the mean khop
+    layers saved by streaming; the lower-is-better p50/p99 sojourn
+    points ride along as ``derived`` metadata (recorded in the bench
+    JSON, never compared — the dist benches' byte-counter precedent)."""
+    from benchmarks.serve_bench import bench_points
+    points = bench_points(10)
+    sojourn = {k: v for k, v in points.items() if "sojourn" in k}
+    out = {}
+    for k, v in points.items():
+        if "sojourn" in k:
+            continue
+        unit = ("teps" if "teps" in k
+                else "ratio" if "frac" in k else "layers")
+        out[f"serve.{k}"] = dict(value=v, unit=unit)
+        if "teps" in k:
+            out[f"serve.{k}"]["derived"] = sojourn
+    return out
 
 
 def _bench_dist_smoke() -> dict:
@@ -197,6 +225,7 @@ def main() -> None:
     benches.update(_bench_msbfs())
     benches.update(_bench_analytics())
     benches.update(_bench_sssp())
+    benches.update(_bench_serve_smoke())
     if not args.skip_dist:
         benches.update(_bench_dist_smoke())
         benches.update(_bench_dist2d_smoke())

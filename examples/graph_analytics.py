@@ -40,6 +40,18 @@ print(f"diameter of component {diam.component}: "
       f"({'exact' if diam.exact else 'bracketed'} after {diam.sweeps} "
       f"sweeps)")
 
+# the same queries served online: AnalyticsService streams khop answers
+# mid-sweep (depth-k bands are final), bit-identical to run_query above
+from repro.serving import AnalyticsService
+
+with AnalyticsService(g, slots=64) as svc:
+    rec = svc.submit(KHopQuery(sources=tuple(int(s) for s in seeds), k=2))
+    served = svc.result(rec.request.id, timeout=120.0).result
+print(f"served khop: streamed_early={rec.answered_early} "
+      f"sojourn={rec.sojourn} layers")
+assert np.array_equal(served.words, hops.words)
+assert np.array_equal(served.counts, hops.counts)
+
 # the invariants every run must satisfy
 assert comps.sizes.sum() == g.n
 assert csize == int(np.max(comps.sizes))

@@ -1,7 +1,7 @@
 """Lane-parallel graph analytics served on top of the MS-BFS engine.
 
 The paper's hybrid BFS is a building block; this package is the payoff:
-connected components, closeness centrality, k-hop neighbourhood /
+connected components, closeness centrality, BFS / k-hop neighbourhood /
 reachability queries, and diameter bounds, all computed by batching
 traversals through the bit-lane engines (``repro.core.msbfs`` on one
 host, ``repro.core.dist_msbfs`` across a mesh) — many analytics
@@ -15,12 +15,17 @@ dispatch with ``run_query``, or call the workload functions directly
 (``connected_components``, ``closeness_centrality``,
 ``khop_neighborhood``, ``reachability``, ``diameter_bounds``). Share one
 ``LaneEngine`` across queries to reuse the graph partition and compiled
-sweeps.
+sweeps. For online serving, wrap the engine in
+``repro.serving.AnalyticsService`` and submit
+``AnalyticsRequest`` envelopes — every result carries the uniform
+``QueryMeta`` either way.
 """
-from repro.analytics.api import (ClosenessQuery, ComponentsQuery,
-                                 DiameterQuery, KHopQuery, QUERY_TYPES,
-                                 SSSPQuery, WeightedClosenessQuery,
-                                 run_query)
+from repro.analytics.api import (AnalyticsAnswer, AnalyticsRequest,
+                                 BFSQuery, ClosenessQuery, ComponentsQuery,
+                                 DiameterQuery, KHopQuery, QUERY_KINDS,
+                                 QUERY_TYPES, ReachQuery, SSSPQuery,
+                                 WeightedClosenessQuery, answer_request,
+                                 query_kind, run_query)
 from repro.analytics.closeness import (ClosenessResult, closeness_centrality,
                                        closeness_from_depths,
                                        closeness_from_dists)
@@ -28,18 +33,22 @@ from repro.analytics.components import (ComponentsResult,
                                         connected_components)
 from repro.analytics.diameter import DiameterResult, diameter_bounds
 from repro.analytics.engine import LaneEngine, as_engine
-from repro.analytics.khop import (KHopResult, khop_neighborhood,
+from repro.analytics.khop import (BFSResult, KHopResult, ReachResult,
+                                  bfs_depths, khop_neighborhood, reach_hops,
                                   reachability)
+from repro.analytics.meta import QueryMeta
 from repro.analytics.weighted import (SSSPDistancesResult, sssp_distances,
                                       weighted_closeness_centrality)
 
 __all__ = [
+    "AnalyticsAnswer", "AnalyticsRequest", "BFSQuery", "BFSResult",
     "ClosenessQuery", "ClosenessResult", "ComponentsQuery",
     "ComponentsResult", "DiameterQuery", "DiameterResult", "KHopQuery",
-    "KHopResult", "LaneEngine", "QUERY_TYPES", "SSSPDistancesResult",
-    "SSSPQuery", "WeightedClosenessQuery", "as_engine",
+    "KHopResult", "LaneEngine", "QUERY_KINDS", "QUERY_TYPES", "QueryMeta",
+    "ReachQuery", "ReachResult", "SSSPDistancesResult", "SSSPQuery",
+    "WeightedClosenessQuery", "answer_request", "as_engine", "bfs_depths",
     "closeness_centrality", "closeness_from_depths", "closeness_from_dists",
     "connected_components", "diameter_bounds", "khop_neighborhood",
-    "reachability", "run_query", "sssp_distances",
-    "weighted_closeness_centrality",
+    "query_kind", "reach_hops", "reachability", "run_query",
+    "sssp_distances", "weighted_closeness_centrality",
 ]

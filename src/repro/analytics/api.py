@@ -1,8 +1,8 @@
 """Typed query surface of the analytics subsystem.
 
-One dataclass per workload, one dispatcher. Callers build a query value,
-hand it to ``run_query`` with a graph (or a prebuilt ``LaneEngine``), and
-get the workload's typed result back::
+One dataclass per workload, one dispatcher, one request/answer envelope.
+Callers build a query value, hand it to ``run_query`` with a graph (or a
+prebuilt ``LaneEngine``), and get the workload's typed result back::
 
     from repro.analytics import (ComponentsQuery, KHopQuery, LaneEngine,
                                  run_query)
@@ -13,26 +13,46 @@ get the workload's typed result back::
 
 The engine choice (host vs ``dist_msbfs`` mesh) and the lane-pool sizing
 (``lanes=None`` -> ``packed.adaptive_lane_pool``) live in ``LaneEngine``;
-queries stay pure descriptions, so the serving loop
-(``repro.launch.serve_bfs``) can tag, queue, and account for them per
-type.
+queries stay pure descriptions.
+
+**Tags.** Every query class declares its wire tag as an explicit
+``kind`` ClassVar, surfaced through ``query_kind`` and collected into the
+``QUERY_KINDS`` registry at import time — with validation, so a query
+type that forgets (or typos) its tag fails the import instead of
+silently dropping out of envelope serialization. ``QUERY_KINDS`` is the
+single source of truth: the serving mix parser, ``from_wire``, and the
+service's per-type stats all derive from it (unknown tags are ONE error
+path).
+
+**Envelope.** ``AnalyticsRequest(id, tenant, query, arrival)`` /
+``AnalyticsAnswer(id, result, meta)`` wrap queries for the serving path
+(``repro.serving.AnalyticsService``); ``answer_request`` is the shared
+offline handler — the service and ``run_query`` route through the SAME
+per-type handler table (``_HANDLERS``), never a parallel string-tag
+dispatch.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import itertools
+from dataclasses import asdict, dataclass, field
+from typing import ClassVar
 
 from repro.analytics.closeness import ClosenessResult, closeness_centrality
 from repro.analytics.components import (ComponentsResult,
                                         connected_components)
 from repro.analytics.diameter import DiameterResult, diameter_bounds
 from repro.analytics.engine import as_engine
-from repro.analytics.khop import KHopResult, khop_neighborhood
+from repro.analytics.khop import (BFSResult, KHopResult, ReachResult,
+                                  bfs_depths, khop_neighborhood, reach_hops)
+from repro.analytics.meta import QueryMeta
 from repro.analytics.weighted import (SSSPDistancesResult, sssp_distances,
                                       weighted_closeness_centrality)
 
 __all__ = [
-    "ClosenessQuery", "ComponentsQuery", "DiameterQuery", "KHopQuery",
-    "QUERY_TYPES", "SSSPQuery", "WeightedClosenessQuery", "run_query",
+    "AnalyticsAnswer", "AnalyticsRequest", "BFSQuery", "ClosenessQuery",
+    "ComponentsQuery", "DiameterQuery", "KHopQuery", "QUERY_KINDS",
+    "QUERY_TYPES", "ReachQuery", "SSSPQuery", "WeightedClosenessQuery",
+    "answer_request", "query_kind", "run_query",
 ]
 
 
@@ -41,7 +61,7 @@ class ComponentsQuery:
     """Connected components of the whole graph."""
     batch: int = 64              # BFS lanes seeded per sweep
 
-    kind = "components"
+    kind: ClassVar[str] = "components"
 
 
 @dataclass(frozen=True)
@@ -49,13 +69,24 @@ class ClosenessQuery:
     """Closeness centrality for every vertex.
 
     ``sources=None`` forces exact, an int samples that many sources,
-    ``"auto"`` (default) picks exact for small n, sampled for large n.
+    ``"auto"`` (default) picks exact for small n, sampled for large n,
+    and an explicit id tuple pins the sample (the serving path uses this
+    so offline replays reproduce it bit-for-bit).
     """
-    sources: int | str | None = "auto"
+    sources: int | str | tuple[int, ...] | None = "auto"
     seed: int = 0
     chunk: int = 256             # roots per engine sweep
 
-    kind = "closeness"
+    kind: ClassVar[str] = "closeness"
+
+
+@dataclass(frozen=True)
+class BFSQuery:
+    """Full BFS traversal from each source (one lane each): depth columns
+    plus per-source layer/reach counts."""
+    sources: tuple[int, ...]
+
+    kind: ClassVar[str] = "bfs"
 
 
 @dataclass(frozen=True)
@@ -64,7 +95,17 @@ class KHopQuery:
     sources: tuple[int, ...]
     k: int
 
-    kind = "khop"
+    kind: ClassVar[str] = "khop"
+
+
+@dataclass(frozen=True)
+class ReachQuery:
+    """Pairwise source->target hop distances (one lane per source);
+    ``targets=None`` means all-pairs among the sources."""
+    sources: tuple[int, ...]
+    targets: tuple[int, ...] | None = None
+
+    kind: ClassVar[str] = "reach"
 
 
 @dataclass(frozen=True)
@@ -74,7 +115,7 @@ class DiameterQuery:
     sweeps: int = 2
     seed: int = 0
 
-    kind = "diameter"
+    kind: ClassVar[str] = "diameter"
 
 
 @dataclass(frozen=True)
@@ -85,29 +126,151 @@ class SSSPQuery:
     sources: tuple[int, ...]
     delta: float | None = None
 
-    kind = "sssp"
+    kind: ClassVar[str] = "sssp"
 
 
 @dataclass(frozen=True)
 class WeightedClosenessQuery:
     """Weighted closeness centrality for every vertex — ``sources``
     follows the ``ClosenessQuery`` rule (None exact / int sampled /
-    "auto" dispatch on n). Needs a weighted engine."""
-    sources: int | str | None = "auto"
+    "auto" dispatch on n / explicit id tuple). Needs a weighted
+    engine."""
+    sources: int | str | tuple[int, ...] | None = "auto"
     seed: int = 0
     chunk: int = 64              # dense float lanes per engine sweep
     delta: float | None = None
 
-    kind = "weighted_closeness"
+    kind: ClassVar[str] = "weighted_closeness"
 
 
-QUERY_TYPES = (ComponentsQuery, ClosenessQuery, KHopQuery, DiameterQuery,
-               SSSPQuery, WeightedClosenessQuery)
+QUERY_TYPES = (ComponentsQuery, ClosenessQuery, BFSQuery, KHopQuery,
+               ReachQuery, DiameterQuery, SSSPQuery, WeightedClosenessQuery)
 
-Query = (ComponentsQuery | ClosenessQuery | KHopQuery | DiameterQuery
-         | SSSPQuery | WeightedClosenessQuery)
-Result = (ComponentsResult | ClosenessResult | KHopResult | DiameterResult
-          | SSSPDistancesResult)
+Query = (ComponentsQuery | ClosenessQuery | BFSQuery | KHopQuery
+         | ReachQuery | DiameterQuery | SSSPQuery | WeightedClosenessQuery)
+Result = (ComponentsResult | ClosenessResult | BFSResult | KHopResult
+          | ReachResult | DiameterResult | SSSPDistancesResult)
+
+
+def query_kind(query_type: type) -> str:
+    """The explicit wire tag of a query class. The tag must be declared
+    by the class ITSELF (``kind`` ClassVar in its own ``__dict__``) — an
+    inherited or missing tag is a wiring bug that would silently break
+    envelope serialization, so it raises here instead."""
+    k = query_type.__dict__.get("kind")
+    if not isinstance(k, str) or not k:
+        raise TypeError(
+            f"{query_type.__name__} declares no wire tag — every query "
+            f"class must define its own `kind: ClassVar[str]`")
+    return k
+
+
+def _build_registry() -> dict[str, type]:
+    reg: dict[str, type] = {}
+    for t in QUERY_TYPES:
+        k = query_kind(t)
+        if k in reg:
+            raise TypeError(
+                f"duplicate query tag {k!r}: {reg[k].__name__} and "
+                f"{t.__name__}")
+        reg[k] = t
+    return reg
+
+
+# tag -> query class; THE registry every tag consumer derives from
+QUERY_KINDS: dict[str, type] = _build_registry()
+
+
+# ---------------------------------------------------------------------------
+# Request/answer envelope — shared by offline run_query and the service.
+# ---------------------------------------------------------------------------
+
+_req_ids = itertools.count(1)
+
+
+@dataclass
+class AnalyticsRequest:
+    """One serving request: a typed query plus routing/accounting fields.
+
+    ``arrival`` is the layer-clock tick the request becomes visible in a
+    replayed trace (0 = immediately); the service stamps real submit
+    times itself. ``id`` auto-assigns when left empty."""
+    query: Query
+    id: str = ""
+    tenant: str = "default"
+    arrival: int = 0
+
+    def __post_init__(self):
+        if type(self.query) not in QUERY_KINDS.values():
+            raise TypeError(
+                f"unknown analytics query type "
+                f"{type(self.query).__name__!r} — expected one of "
+                f"{sorted(t.__name__ for t in QUERY_TYPES)}")
+        if not self.id:
+            self.id = f"q{next(_req_ids)}"
+
+    @property
+    def kind(self) -> str:
+        return query_kind(type(self.query))
+
+    def to_wire(self) -> dict:
+        """JSON-serializable envelope; ``from_wire`` round-trips it."""
+        q = {k: (list(v) if isinstance(v, tuple) else v)
+             for k, v in asdict(self.query).items()}
+        return dict(id=self.id, tenant=self.tenant, arrival=self.arrival,
+                    kind=self.kind, query=q)
+
+    @classmethod
+    def from_wire(cls, wire: dict) -> "AnalyticsRequest":
+        kind = wire.get("kind")
+        qtype = QUERY_KINDS.get(kind)
+        if qtype is None:       # the ONE unknown-tag error path
+            raise ValueError(
+                f"unknown query tag {kind!r} — expected one of "
+                f"{sorted(QUERY_KINDS)}")
+        q = {k: (tuple(v) if isinstance(v, list) else v)
+             for k, v in wire.get("query", {}).items()}
+        return cls(query=qtype(**q), id=wire.get("id", ""),
+                   tenant=wire.get("tenant", "default"),
+                   arrival=int(wire.get("arrival", 0)))
+
+
+@dataclass
+class AnalyticsAnswer:
+    """The answer to one request: the workload's typed result plus the
+    uniform ``QueryMeta`` (same object as ``result.meta``)."""
+    id: str
+    result: Result
+    meta: QueryMeta = field(default_factory=QueryMeta)
+
+    def to_wire(self) -> dict:
+        """JSON-serializable summary envelope (the typed result itself
+        stays in-process — arrays don't cross the wire)."""
+        meta = {k: v for k, v in self.meta.as_dict().items()
+                if isinstance(v, (str, int, float, bool, type(None)))}
+        return dict(id=self.id, kind=self.meta.kind, meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: ONE handler table keyed on the query class.
+# ---------------------------------------------------------------------------
+
+_HANDLERS = {
+    ComponentsQuery: lambda eng, q: connected_components(eng, batch=q.batch),
+    ClosenessQuery: lambda eng, q: closeness_centrality(
+        eng, sources=q.sources, seed=q.seed, chunk=q.chunk),
+    BFSQuery: lambda eng, q: bfs_depths(eng, list(q.sources)),
+    KHopQuery: lambda eng, q: khop_neighborhood(eng, list(q.sources), q.k),
+    ReachQuery: lambda eng, q: reach_hops(
+        eng, list(q.sources),
+        None if q.targets is None else list(q.targets)),
+    DiameterQuery: lambda eng, q: diameter_bounds(
+        eng, num_seeds=q.num_seeds, sweeps=q.sweeps, seed=q.seed),
+    SSSPQuery: lambda eng, q: sssp_distances(
+        eng, list(q.sources), delta=q.delta),
+    WeightedClosenessQuery: lambda eng, q: weighted_closeness_centrality(
+        eng, sources=q.sources, seed=q.seed, chunk=q.chunk, delta=q.delta),
+}
 
 
 def run_query(g_or_engine, query: Query, **engine_kwargs) -> Result:
@@ -117,22 +280,18 @@ def run_query(g_or_engine, query: Query, **engine_kwargs) -> Result:
     engine when issuing several queries so sweeps reuse the partition and
     compiled executables."""
     eng = as_engine(g_or_engine, **engine_kwargs)
-    if isinstance(query, ComponentsQuery):
-        return connected_components(eng, batch=query.batch)
-    if isinstance(query, ClosenessQuery):
-        return closeness_centrality(eng, sources=query.sources,
-                                    seed=query.seed, chunk=query.chunk)
-    if isinstance(query, KHopQuery):
-        return khop_neighborhood(eng, list(query.sources), query.k)
-    if isinstance(query, DiameterQuery):
-        return diameter_bounds(eng, num_seeds=query.num_seeds,
-                               sweeps=query.sweeps, seed=query.seed)
-    if isinstance(query, SSSPQuery):
-        return sssp_distances(eng, list(query.sources), delta=query.delta)
-    if isinstance(query, WeightedClosenessQuery):
-        return weighted_closeness_centrality(
-            eng, sources=query.sources, seed=query.seed, chunk=query.chunk,
-            delta=query.delta)
-    raise TypeError(f"unknown analytics query type {type(query).__name__!r}"
-                    f" — expected one of "
-                    f"{[t.__name__ for t in QUERY_TYPES]}")
+    handler = _HANDLERS.get(type(query))
+    if handler is None:
+        raise TypeError(
+            f"unknown analytics query type {type(query).__name__!r} — "
+            f"expected one of {[t.__name__ for t in QUERY_TYPES]}")
+    return handler(eng, query)
+
+
+def answer_request(g_or_engine, request: AnalyticsRequest,
+                   **engine_kwargs) -> AnalyticsAnswer:
+    """Answer one enveloped request offline — the reference path the
+    serving answers are parity-tested against (and the fallback the
+    service itself uses for batch-only workloads)."""
+    result = run_query(g_or_engine, request.query, **engine_kwargs)
+    return AnalyticsAnswer(id=request.id, result=result, meta=result.meta)

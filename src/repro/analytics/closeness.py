@@ -29,6 +29,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.analytics.engine import as_engine, pad_roots
+from repro.analytics.meta import QueryMeta
 
 __all__ = ["ClosenessResult", "closeness_centrality",
            "closeness_from_depths", "closeness_from_dists",
@@ -45,7 +46,7 @@ class ClosenessResult:
     method: str                  # "exact" | "sampled"
     num_sources: int
     seed: int | None
-    meta: dict = field(default_factory=dict)
+    meta: QueryMeta = field(default_factory=QueryMeta)
 
     def top(self, k: int = 5) -> list[tuple[int, float]]:
         """The k most central vertices as (vertex, closeness), descending
@@ -54,18 +55,31 @@ class ClosenessResult:
         return [(int(v), float(self.closeness[v])) for v in order]
 
 
-def select_sources(n: int, sources: int | str | None,
+def select_sources(n: int, sources,
                    seed: int) -> tuple[np.ndarray, str]:
     """The closeness source-selection rule, shared by the hop-count and
     weighted estimators (ONE implementation — the sampling scheme is part
     of the estimator's contract): ``None`` -> all n vertices (exact), an
     int -> that many distinct sampled vertices, ``"auto"`` -> exact for
-    small n, a capped sample otherwise. Returns (sources, method)."""
-    if sources == "auto":
+    small n, a capped sample otherwise, an explicit id sequence -> used
+    as-is (the serving path pins its sample this way so offline replays
+    reproduce it). Returns (sources, method)."""
+    if isinstance(sources, str):
+        if sources != "auto":
+            raise ValueError(
+                f"sources must be None, 'auto', an int, or an id "
+                f"sequence — got {sources!r}")
         sources = None if n <= EXACT_N_THRESHOLD else min(
             n, SAMPLED_SOURCES_DEFAULT)
     if sources is None:
         return np.arange(n, dtype=np.int32), "exact"
+    if not isinstance(sources, (int, np.integer)):
+        src = np.asarray(sources, np.int32).reshape(-1)
+        if src.size < 1 or src.min() < 0 or src.max() >= n:
+            raise ValueError(
+                f"explicit closeness sources must be non-empty vertex "
+                f"ids in [0, {n}), got {src!r}")
+        return src, ("sampled" if src.size < n else "exact")
     k = int(sources)
     if not 1 <= k <= n:
         raise ValueError(f"sources must be in [1, {n}], got {k}")
@@ -125,13 +139,17 @@ def closeness_centrality(g_or_engine, sources: int | str | None = "auto",
 
     depth_cols = np.empty((n, src.size), np.int32)
     sweeps = 0
+    layers = 0
     for lo in range(0, src.size, chunk):
         real = min(chunk, src.size - lo)
         res = eng.sweep(pad_roots(src[lo:lo + chunk], chunk))
         depth_cols[:, lo:lo + real] = np.asarray(res.depth)[:, :real]
+        layers += int(np.asarray(res.num_layers).max())
         sweeps += 1
     closeness = closeness_from_depths(depth_cols, n)
     return ClosenessResult(
         closeness=closeness, method=method, num_sources=int(src.size),
         seed=None if method == "exact" else seed,
-        meta=dict(chunk=chunk, sweeps=sweeps, ndev=eng.ndev))
+        meta=QueryMeta(kind="closeness", layers=layers,
+                       lanes=eng.lanes_for(chunk), sweeps=sweeps,
+                       ndev=eng.ndev, extra=dict(chunk=chunk)))

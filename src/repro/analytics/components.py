@@ -22,6 +22,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.analytics.engine import as_engine, pad_roots
+from repro.analytics.meta import QueryMeta
 
 __all__ = ["ComponentsResult", "connected_components"]
 
@@ -34,7 +35,7 @@ class ComponentsResult:
     sizes: np.ndarray            # int64[C] vertices per component, aligned
     sweeps: int                  # engine sweeps run
     roots_used: int              # total BFS lanes consumed
-    meta: dict = field(default_factory=dict)
+    meta: QueryMeta = field(default_factory=QueryMeta)
 
     @property
     def largest(self) -> tuple[int, int]:
@@ -59,6 +60,7 @@ def connected_components(g_or_engine, batch: int = 64,
     labels = np.full(n, -1, np.int64)
     sweeps = 0
     roots_used = 0
+    layers = 0
     while True:
         unlabelled = np.flatnonzero(labels < 0)
         if unlabelled.size == 0:
@@ -73,6 +75,7 @@ def connected_components(g_or_engine, batch: int = 64,
         first = np.argmax(reached, axis=1)
         hit = reached.any(axis=1) & (labels < 0)
         labels[hit] = roots[first[hit]]
+        layers += int(np.asarray(res.num_layers).max())
         sweeps += 1
         roots_used += real
     ids, sizes = np.unique(labels, return_counts=True)
@@ -80,4 +83,6 @@ def connected_components(g_or_engine, batch: int = 64,
         labels=labels, num_components=int(ids.size),
         component_ids=ids.astype(np.int64), sizes=sizes.astype(np.int64),
         sweeps=sweeps, roots_used=roots_used,
-        meta=dict(batch=batch, ndev=eng.ndev))
+        meta=QueryMeta(kind="components", layers=layers,
+                       lanes=eng.lanes_for(batch), sweeps=sweeps,
+                       ndev=eng.ndev, extra=dict(batch=batch)))

@@ -26,6 +26,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.analytics.engine import as_engine, pad_roots
+from repro.analytics.meta import QueryMeta
 
 __all__ = ["DiameterResult", "diameter_bounds"]
 
@@ -38,7 +39,7 @@ class DiameterResult:
     sources: np.ndarray          # int64[k] every BFS source used
     eccentricities: np.ndarray   # int64[k] ecc per source, aligned
     sweeps: int
-    meta: dict = field(default_factory=dict)
+    meta: QueryMeta = field(default_factory=QueryMeta)
 
     @property
     def exact(self) -> bool:
@@ -81,8 +82,10 @@ def diameter_bounds(g_or_engine, num_seeds: int = 4, sweeps: int = 2,
                                replace=False)).astype(np.int32)
 
     all_src, all_ecc, all_comp = [], [], []
+    layers = 0
     for rnd in range(sweeps):
         res = eng.sweep(roots)
+        layers += int(np.asarray(res.num_layers).max())
         depth = np.asarray(res.depth)
         ecc, comp, deepest = _ecc_and_comp(depth)
         all_src.append(roots.astype(np.int64))
@@ -105,5 +108,8 @@ def diameter_bounds(g_or_engine, num_seeds: int = 4, sweeps: int = 2,
     return DiameterResult(
         lower=lower, upper=upper, component=witness, sources=src,
         eccentricities=ecc, sweeps=len(all_src),
-        meta=dict(num_seeds=num_seeds, requested_sweeps=sweeps,
-                  ndev=eng.ndev))
+        meta=QueryMeta(kind="diameter", layers=layers,
+                       lanes=eng.lanes_for(num_seeds), sweeps=len(all_src),
+                       ndev=eng.ndev,
+                       extra=dict(num_seeds=num_seeds,
+                                  requested_sweeps=sweeps)))

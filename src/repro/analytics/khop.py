@@ -1,4 +1,4 @@
-"""K-hop neighbourhoods and reachability from packed frontier words.
+"""Traversal read-out workloads: BFS depths, k-hop bands, reachability.
 
 A k-hop query is a depth-sliced BFS read-out: run the lane engine from the
 query sources, then slice the per-lane depths at ``depth <= k``. The
@@ -8,7 +8,14 @@ so downstream packed consumers (set intersections across queries, the GNN
 sampler's candidate pools) operate on words, not n-vectors; per-lane
 membership unpacks on demand.
 
-``graph/sampler.py`` exposes this as ``khop_node_sets`` — exact
+``bfs_depths`` / ``reach_hops`` are the plain-traversal siblings behind
+``BFSQuery`` / ``ReachQuery``: full per-source depth columns and pairwise
+hop distances. They exist so the serving path (``repro.serving``) and the
+offline ``run_query`` dispatch share ONE handler per tag — the streaming
+service answers the same ``KHopResult``/``ReachResult``/``BFSResult``
+values, mid-sweep, from the identical depth band.
+
+``graph/sampler.py`` exposes the k-hop band as ``khop_node_sets`` — exact
 neighbourhood candidate pools for GNN sampling riding the same fast path
 as BFS serving.
 """
@@ -19,9 +26,11 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.analytics.engine import as_engine
+from repro.analytics.meta import QueryMeta
 from repro.core.packed import unpack_lanes
 
-__all__ = ["KHopResult", "khop_neighborhood", "reachability"]
+__all__ = ["BFSResult", "KHopResult", "ReachResult", "bfs_depths",
+           "khop_neighborhood", "reach_hops", "reachability"]
 
 
 @dataclass(frozen=True)
@@ -30,8 +39,10 @@ class KHopResult:
     k: int
     words: np.ndarray            # uint[n, W] — packed membership, lane s = source s
     counts: np.ndarray           # int64[S] — |k-hop neighbourhood| incl. source
-    depth: np.ndarray            # int32[n, S] — full BFS depths (-1 unreached)
-    meta: dict = field(default_factory=dict)
+    depth: np.ndarray            # int32[n, S] — BFS depths (-1 unreached);
+    #                              a streamed answer only guarantees the
+    #                              depth <= k band (meta.extra["depth_partial"])
+    meta: QueryMeta = field(default_factory=QueryMeta)
 
     def members(self, lane: int) -> np.ndarray:
         """Vertex ids within k hops of ``sources[lane]`` (ascending)."""
@@ -41,6 +52,44 @@ class KHopResult:
     def member_mask(self) -> np.ndarray:
         """bool[n, S] unpacked membership (one column per source)."""
         return np.asarray(unpack_lanes(self.words, self.sources.size))
+
+
+@dataclass(frozen=True)
+class BFSResult:
+    """Full traversal read-out per source: depth columns + reach counts."""
+    sources: np.ndarray          # int32[S]
+    depth: np.ndarray            # int32[n, S] — BFS depths, -1 unreached
+    num_layers: np.ndarray       # int64[S] — layers until the frontier emptied
+    reached: np.ndarray          # int64[S] — vertices reached incl. source
+    meta: QueryMeta = field(default_factory=QueryMeta)
+
+
+@dataclass(frozen=True)
+class ReachResult:
+    """Pairwise source->target hop distances (-1 unreachable)."""
+    sources: np.ndarray          # int32[S]
+    targets: np.ndarray          # int32[T]
+    hops: np.ndarray             # int64[S, T]
+    meta: QueryMeta = field(default_factory=QueryMeta)
+
+    def reachable(self) -> np.ndarray:
+        """bool[S, T] — target reachable from source."""
+        return self.hops >= 0
+
+
+def khop_result_from_depth(sources: np.ndarray, k: int, depth: np.ndarray,
+                           meta: QueryMeta) -> KHopResult:
+    """Assemble a ``KHopResult`` from depth columns whose ``<= k`` band is
+    final — the ONE construction shared by the offline sweep below and the
+    serving path's mid-sweep streaming read-out, so the two answers are
+    bit-identical by construction (words/counts/members read only the
+    band)."""
+    from repro.core.packed import depth_slice_words
+    band = (depth >= 0) & (depth <= k)
+    words = np.asarray(depth_slice_words(depth, k))
+    counts = band.sum(axis=0).astype(np.int64)
+    return KHopResult(sources=sources, k=int(k), words=words, counts=counts,
+                      depth=depth, meta=meta)
 
 
 def khop_neighborhood(g_or_engine, sources, k: int,
@@ -57,10 +106,43 @@ def khop_neighborhood(g_or_engine, sources, k: int,
     sources = np.asarray(sources, np.int32).reshape(-1)
     res = eng.sweep(sources)
     depth = np.asarray(res.depth)
-    words = np.asarray(res.reached_words(k))
-    counts = ((depth >= 0) & (depth <= k)).sum(axis=0).astype(np.int64)
-    return KHopResult(sources=sources, k=int(k), words=words, counts=counts,
-                      depth=depth, meta=dict(ndev=eng.ndev))
+    meta = QueryMeta(kind="khop",
+                     layers=int(np.asarray(res.num_layers).max()),
+                     lanes=eng.lanes_for(sources.size), ndev=eng.ndev)
+    return khop_result_from_depth(sources, k, depth, meta)
+
+
+def bfs_depths(g_or_engine, sources, **engine_kwargs) -> BFSResult:
+    """Full BFS from each source — the ``BFSQuery`` handler: one engine
+    sweep, depth columns plus per-source layer/reach counts."""
+    eng = as_engine(g_or_engine, **engine_kwargs)
+    sources = np.asarray(sources, np.int32).reshape(-1)
+    res = eng.sweep(sources)
+    depth = np.asarray(res.depth)
+    num_layers = np.asarray(res.num_layers).astype(np.int64)
+    return BFSResult(
+        sources=sources, depth=depth, num_layers=num_layers,
+        reached=(depth >= 0).sum(axis=0).astype(np.int64),
+        meta=QueryMeta(kind="bfs", layers=int(num_layers.max()),
+                       lanes=eng.lanes_for(sources.size), ndev=eng.ndev))
+
+
+def reach_hops(g_or_engine, sources, targets=None,
+               **engine_kwargs) -> ReachResult:
+    """Pairwise hop distances between source and target batches — the
+    ``ReachQuery`` handler wrapping ``reachability``'s raw matrix in the
+    typed envelope. ``targets=None`` uses the sources (all-pairs)."""
+    eng = as_engine(g_or_engine, **engine_kwargs)
+    sources = np.asarray(sources, np.int32).reshape(-1)
+    targets = sources if targets is None else np.asarray(
+        targets, np.int32).reshape(-1)
+    res = eng.sweep(sources)
+    hops = np.asarray(res.depth)[targets].T.astype(np.int64)
+    return ReachResult(
+        sources=sources, targets=targets, hops=hops,
+        meta=QueryMeta(kind="reach",
+                       layers=int(np.asarray(res.num_layers).max()),
+                       lanes=eng.lanes_for(sources.size), ndev=eng.ndev))
 
 
 def reachability(g_or_engine, sources, targets=None,
@@ -68,10 +150,6 @@ def reachability(g_or_engine, sources, targets=None,
     """Pairwise hop distances ``int64[S, T]`` between source and target
     batches (-1 unreachable) — one sweep from the sources, gathered at the
     target rows. ``targets=None`` uses the sources (all-pairs among
-    them)."""
-    eng = as_engine(g_or_engine, **engine_kwargs)
-    sources = np.asarray(sources, np.int32).reshape(-1)
-    targets = sources if targets is None else np.asarray(
-        targets, np.int32).reshape(-1)
-    res = eng.sweep(sources)
-    return np.asarray(res.depth)[targets].T.astype(np.int64)
+    them). The raw-array surface; ``reach_hops`` returns the typed
+    envelope."""
+    return reach_hops(g_or_engine, sources, targets, **engine_kwargs).hops

@@ -18,6 +18,7 @@ keep working on the same engine (weights ignored).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -26,6 +27,7 @@ from repro.analytics.closeness import (ClosenessResult,
                                        closeness_from_dists,
                                        select_sources)
 from repro.analytics.engine import as_engine, pad_roots
+from repro.analytics.meta import QueryMeta
 
 __all__ = ["SSSPDistancesResult", "sssp_distances",
            "weighted_closeness_centrality"]
@@ -37,9 +39,19 @@ class SSSPDistancesResult:
     dist: np.ndarray             # float32[n, S], inf unreached
     delta: float | tuple         # bucket width(s) the sweep ran with
     steps: np.ndarray            # int32[S] engine steps per source lane
-    truncated: np.ndarray        # bool[S] — lane hit the step cap: its
+    truncated_lanes: np.ndarray  # bool[S] — lane hit the step cap: its
     #                              column is a partial relaxation
-    meta: dict = field(default_factory=dict)
+    meta: QueryMeta = field(default_factory=QueryMeta)
+
+    @property
+    def truncated(self) -> np.ndarray:
+        """Deprecated spelling of ``truncated_lanes`` (the common
+        ``meta.truncated`` flag is now the any-lane summary)."""
+        warnings.warn(
+            "SSSPDistancesResult.truncated is deprecated — use "
+            ".truncated_lanes (per-lane) or .meta.truncated (any lane)",
+            DeprecationWarning, stacklevel=2)
+        return self.truncated_lanes
 
     def reached(self) -> np.ndarray:
         """bool[n, S] — vertices with a finite distance per source."""
@@ -88,12 +100,18 @@ def sssp_distances(g_or_engine, sources, delta=None,
     delta = _resolve_delta(eng, delta)
     sources = np.asarray(sources, np.int32).reshape(-1)
     res = eng.sssp_sweep(sources, delta=delta)
+    steps = np.asarray(res.steps)
+    truncated_lanes = np.asarray(res.truncated)
     return SSSPDistancesResult(
         sources=sources, dist=np.asarray(res.dist),
         delta=delta if isinstance(delta, tuple) else float(delta),
-        steps=np.asarray(res.steps),
-        truncated=np.asarray(res.truncated),
-        meta=dict(ndev=eng.ndev, grid=eng.grid, compress=eng.compress))
+        steps=steps, truncated_lanes=truncated_lanes,
+        meta=QueryMeta(kind="sssp", layers=int(steps.max()),
+                       truncated=bool(truncated_lanes.any()),
+                       lanes=eng.sssp_lanes_for(sources.size),
+                       ndev=eng.ndev,
+                       extra=dict(grid=eng.grid, compress=eng.compress,
+                                  delta=delta)))
 
 
 def weighted_closeness_centrality(g_or_engine,
@@ -117,6 +135,7 @@ def weighted_closeness_centrality(g_or_engine,
 
     dist_cols = np.empty((n, src.size), np.float32)
     sweeps = 0
+    steps = 0
     truncated = 0
     for lo in range(0, src.size, chunk):
         real = min(chunk, src.size - lo)
@@ -124,10 +143,15 @@ def weighted_closeness_centrality(g_or_engine,
                              delta=delta)
         dist_cols[:, lo:lo + real] = np.asarray(res.dist)[:, :real]
         truncated += int(np.asarray(res.truncated)[:real].sum())
+        steps += int(np.asarray(res.steps).max())
         sweeps += 1
     closeness = closeness_from_dists(dist_cols, n)
     return ClosenessResult(
         closeness=closeness, method=method, num_sources=int(src.size),
         seed=None if method == "exact" else seed,
-        meta=dict(chunk=chunk, sweeps=sweeps, ndev=eng.ndev,
-                  weighted=True, delta=delta, truncated_lanes=truncated))
+        meta=QueryMeta(kind="weighted_closeness", layers=steps,
+                       truncated=truncated > 0,
+                       lanes=eng.sssp_lanes_for(chunk), sweeps=sweeps,
+                       ndev=eng.ndev,
+                       extra=dict(chunk=chunk, weighted=True, delta=delta,
+                                  truncated_lanes=truncated)))

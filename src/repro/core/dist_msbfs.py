@@ -54,8 +54,8 @@ from repro.core.csr import CSRGraph
 from repro.core.dist_bfs import DistGraph, _flat_axis_index, partition_graph
 from repro.core.exchange import allreduce_or
 from repro.core.hybrid import ALPHA_DEFAULT, BETA_DEFAULT, MAX_TRACE
-from repro.core.msbfs import (MAX_LANES, MSBFSResult, msbfs_engine_enqueue,
-                              msbfs_engine_idle)
+from repro.core.msbfs import (LayerReadout, MAX_LANES, MSBFSResult,
+                              msbfs_engine_enqueue, msbfs_engine_idle)
 from repro.core.packed import (LANE_WORD_BITS, MODES, adaptive_lane_pool,
                                dispatch_packed_step, lane_counters,
                                num_lane_words, pack_lanes, queue_claims,
@@ -65,7 +65,8 @@ __all__ = [
     "DistGraph", "DistPipelineState", "allreduce_or", "dist_msbfs",
     "dist_msbfs_engine_drain", "dist_msbfs_engine_enqueue",
     "dist_msbfs_engine_idle", "dist_msbfs_engine_init",
-    "dist_msbfs_engine_result", "dist_msbfs_engine_step", "host_mesh",
+    "dist_msbfs_engine_readout", "dist_msbfs_engine_result",
+    "dist_msbfs_engine_retire", "dist_msbfs_engine_step", "host_mesh",
     "partition_graph",
 ]
 
@@ -432,6 +433,66 @@ def dist_msbfs_engine_result(dg: DistGraph, state: DistPipelineState,
         edges_traversed=state.out_edges[:r],
         trace_dir=state.trace_dir[:, :r], trace_vf=state.trace_vf[:, :r],
         trace_ef=state.trace_ef[:, :r], trace_eu=state.trace_eu[:, :r])
+
+
+def dist_msbfs_engine_readout(dg: DistGraph,
+                              state: DistPipelineState) -> LayerReadout:
+    """Snapshot the streaming read-out surface of the sharded engine —
+    the SAME ``LayerReadout`` as the host engine, with the per-device row
+    blocks reassembled into global vertex order and trimmed to the
+    original vertex count, so streaming consumers are partition-blind
+    (control state is replicated; the depth surfaces are bit-identical
+    to the host engine's at every layer)."""
+    cap = state.capacity
+    lanes = state.num_lanes
+    depth = np.reshape(np.asarray(state.depth), (dg.n, lanes))
+    out_depth = np.reshape(np.asarray(state.out_depth), (dg.n, cap + 1))
+    return LayerReadout(
+        layer=int(state.sweep_layers), capacity=cap,
+        lane_qidx=np.asarray(state.lane_qidx),
+        lane_layer=np.asarray(state.lane_layer),
+        depth=depth[:dg.n_orig], out_depth=out_depth[:dg.n_orig],
+        out_layers=np.asarray(state.out_layers))
+
+
+@jax.jit
+def _retire_dist(deg_s, state: DistPipelineState,
+                 lane_mask: jnp.ndarray) -> DistPipelineState:
+    cap = state.capacity
+    mask = lane_mask & (state.lane_qidx < cap)
+    visited_b = unpack_lanes(state.visited, state.num_lanes)
+    deg = deg_s.astype(jnp.int32)[..., None]              # [ndev, n_loc, 1]
+    edges_l = jnp.sum(jnp.where(visited_b, deg, 0), axis=(0, 1),
+                      dtype=jnp.int32)
+    fcol = jnp.where(mask, state.lane_qidx, cap)
+    out_depth = state.out_depth.at[:, :, fcol].set(state.depth)
+    out_edges = state.out_edges.at[fcol].set(edges_l)
+    out_layers = state.out_layers.at[fcol].set(
+        jnp.maximum(state.lane_layer, 1))
+    clear = pack_lanes(mask)
+    return state._replace(
+        frontier=state.frontier & ~clear,
+        visited=state.visited & ~clear,
+        depth=jnp.where(mask, -1, state.depth),
+        lane_layer=jnp.where(mask, 0, state.lane_layer),
+        lane_qidx=jnp.where(mask, cap, state.lane_qidx),
+        out_depth=out_depth, out_edges=out_edges, out_layers=out_layers)
+
+
+def dist_msbfs_engine_retire(dg: DistGraph, state: DistPipelineState,
+                             lane_mask) -> DistPipelineState:
+    """Retire the masked ACTIVE lanes early (sharded mirror of
+    ``msbfs_engine_retire``): flush their depth columns to the per-device
+    output blocks and free the lanes. Control state is replicated, so the
+    host-level mask applies identically on every device; like the
+    enqueue helper this runs outside ``shard_map`` — the next step's jit
+    re-shards the touched leaves."""
+    lane_mask = jnp.asarray(lane_mask, jnp.bool_).reshape(-1)
+    if lane_mask.shape[0] != state.num_lanes:
+        raise ValueError(
+            f"lane_mask has {lane_mask.shape[0]} lanes, engine has "
+            f"{state.num_lanes}")
+    return _retire_dist(dg.deg, state, lane_mask)
 
 
 def host_mesh(ndev: int) -> Mesh:

@@ -60,6 +60,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.csr import CSRGraph
 from repro.core.hybrid import ALPHA_DEFAULT, BETA_DEFAULT, MAX_TRACE
@@ -70,10 +71,11 @@ from repro.core.packed import (LANE_WORD_BITS, MODES, adaptive_lane_pool,
                                select_direction, unpack_lanes, word_dtype)
 
 __all__ = [
-    "LANE_WORD_BITS", "MAX_LANES", "MODES", "MSBFSResult",
+    "LANE_WORD_BITS", "LayerReadout", "MAX_LANES", "MODES", "MSBFSResult",
     "adaptive_lane_pool", "depth_slice_words", "msbfs",
     "msbfs_engine_drain", "msbfs_engine_enqueue", "msbfs_engine_idle",
-    "msbfs_engine_init", "msbfs_engine_result", "msbfs_engine_step",
+    "msbfs_engine_init", "msbfs_engine_readout", "msbfs_engine_result",
+    "msbfs_engine_retire", "msbfs_engine_step", "msbfs_engine_stream",
     "msbfs_pipelined", "num_lane_words", "pack_lanes", "segment_or",
     "unpack_lanes",
 ]
@@ -496,6 +498,134 @@ def msbfs_engine_result(g: CSRGraph, state: PipelineState,
         edges_traversed=state.out_edges[:r],
         trace_dir=state.trace_dir[:, :r], trace_vf=state.trace_vf[:, :r],
         trace_ef=state.trace_ef[:, :r], trace_eu=state.trace_eu[:, :r])
+
+
+# ---------------------------------------------------------------------------
+# Mid-sweep read-out: the per-layer streaming surface.
+#
+# BFS depth finality: once a lane has run t layers, every depth value
+# <= t in its column is FINAL (level-synchronous traversal never revisits
+# a vertex). So a depth-k query (khop band, reach hit) is answerable the
+# moment its lane's layer counter passes k — layers before the lane would
+# naturally flush. ``LayerReadout`` is that surface; ``msbfs_engine_retire``
+# is the matching unlock: flush an answered lane's partial column to its
+# output slot NOW and hand the lane back to the pool.
+# ---------------------------------------------------------------------------
+
+
+class LayerReadout(NamedTuple):
+    """Host-side snapshot of the engine's per-lane depth surface after a
+    step — everything a streaming consumer needs to answer depth-bounded
+    queries mid-sweep (``repro.serving`` drives this each layer)."""
+    layer: int                   # total engine steps run (sweep clock)
+    capacity: int                # queue capacity (lane_qidx == capacity = idle)
+    lane_qidx: np.ndarray        # int32[L] queue slot served per lane
+    lane_layer: np.ndarray       # int32[L] layers run for the lane's root
+    depth: np.ndarray            # int32[n, L] live per-lane depths
+    out_depth: np.ndarray        # int32[n, capacity+1] flushed columns
+    out_layers: np.ndarray       # int32[capacity+1]  0 = unanswered
+
+    def active(self) -> np.ndarray:
+        """bool[L] — lane currently serving a queue slot."""
+        return self.lane_qidx < self.capacity
+
+    def band_final(self, k: int) -> np.ndarray:
+        """bool[L] — active lane whose ``depth <= k`` band is final (it
+        has run at least ``k`` layers; depths are never rewritten)."""
+        return self.active() & (self.lane_layer >= k)
+
+    def lane_of_slot(self, q: int) -> int:
+        """Lane currently serving queue slot ``q`` (-1 if none)."""
+        hit = np.flatnonzero(self.lane_qidx == q)
+        return int(hit[0]) if hit.size else -1
+
+    def slot_depth(self, q: int) -> np.ndarray | None:
+        """Depth column for queue slot ``q``: the flushed output column
+        once answered, the live lane column while in flight, None before
+        the root is seated."""
+        if self.out_layers[q] > 0:
+            return self.out_depth[:, q]
+        lane = self.lane_of_slot(q)
+        return self.depth[:, lane] if lane >= 0 else None
+
+    def slice_words(self, max_depth: int, min_depth: int = 0) -> np.ndarray:
+        """``packed.depth_slice_words`` over the LIVE lane depths — the
+        engines' own packed bit layout, mid-sweep."""
+        return np.asarray(depth_slice_words(self.depth, max_depth,
+                                            min_depth))
+
+
+def msbfs_engine_readout(state: PipelineState) -> LayerReadout:
+    """Snapshot the streaming read-out surface of the host engine."""
+    return LayerReadout(
+        layer=int(state.sweep_layers), capacity=state.capacity,
+        lane_qidx=np.asarray(state.lane_qidx),
+        lane_layer=np.asarray(state.lane_layer),
+        depth=np.asarray(state.depth),
+        out_depth=np.asarray(state.out_depth),
+        out_layers=np.asarray(state.out_layers))
+
+
+def msbfs_engine_stream(g: CSRGraph, state: PipelineState,
+                        mode: str = "hybrid", alpha: float = ALPHA_DEFAULT,
+                        beta: float = BETA_DEFAULT, max_pos: int = 8,
+                        probe_impl: str = "xla"):
+    """Iterate the engine to idleness, yielding ``(state, LayerReadout)``
+    after every layer — the streaming-callback form of
+    ``msbfs_engine_drain``. The caller may enqueue new roots or retire
+    answered lanes between yields; the loop re-checks idleness against
+    the state it yielded, so keep stepping the LAST yielded state."""
+    while not msbfs_engine_idle(state):
+        state = msbfs_engine_step(g, state, mode, alpha, beta, max_pos,
+                                  probe_impl)
+        yield state, msbfs_engine_readout(state)
+
+
+@jax.jit
+def _retire(g: CSRGraph, state: PipelineState,
+            lane_mask: jnp.ndarray) -> PipelineState:
+    cap = state.capacity
+    mask = lane_mask & (state.lane_qidx < cap)
+    visited_b = unpack_lanes(state.visited, state.num_lanes)
+    deg = g.deg.astype(jnp.int32)[:, None]
+    edges_l = jnp.sum(jnp.where(visited_b, deg, 0), axis=0, dtype=jnp.int32)
+    # the flush pattern of _pipeline_body: masked lanes write their queue
+    # slot, everyone else the trailing trash column
+    fcol = jnp.where(mask, state.lane_qidx, cap)
+    out_depth = state.out_depth.at[:, fcol].set(state.depth)
+    out_edges = state.out_edges.at[fcol].set(edges_l)
+    # out_layers > 0 is the answered flag; a lane retired before its
+    # first step (k = 0 band) still counts one layer
+    out_layers = state.out_layers.at[fcol].set(
+        jnp.maximum(state.lane_layer, 1))
+    clear = pack_lanes(mask)
+    return state._replace(
+        frontier=state.frontier & ~clear,
+        visited=state.visited & ~clear,
+        depth=jnp.where(mask, -1, state.depth),
+        lane_layer=jnp.where(mask, 0, state.lane_layer),
+        lane_qidx=jnp.where(mask, cap, state.lane_qidx),
+        out_depth=out_depth, out_edges=out_edges, out_layers=out_layers)
+
+
+def msbfs_engine_retire(g: CSRGraph, state: PipelineState,
+                        lane_mask) -> PipelineState:
+    """Retire the masked ACTIVE lanes early: flush their depth columns to
+    their output slots as-is and free the lanes for the pending queue.
+
+    The streaming unlock behind depth-k serving: once ``LayerReadout
+    .band_final(k)`` says a khop/reach lane's band is final, the answer
+    no longer needs the lane — retiring it mid-sweep returns its bit
+    lane to the pool layers before the traversal would drain. A retired
+    slot's output column is PARTIAL past the retirement layer (exactly
+    the band the caller declared final); ``out_layers`` records the
+    layers actually run. Idle lanes in the mask are ignored."""
+    lane_mask = jnp.asarray(lane_mask, jnp.bool_).reshape(-1)
+    if lane_mask.shape[0] != state.num_lanes:
+        raise ValueError(
+            f"lane_mask has {lane_mask.shape[0]} lanes, engine has "
+            f"{state.num_lanes}")
+    return _retire(g, state, lane_mask)
 
 
 def msbfs_pipelined(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",

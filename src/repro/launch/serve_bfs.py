@@ -1,63 +1,54 @@
-"""Streaming analytics serving loop — mixed query types, ONE engine sweep.
+"""Analytics serving CLI — a thin front end over ``repro.serving``.
 
-PR 2's serving scenario grown into a multi-workload analytics server: the
-pipelined MS-BFS engine (``repro.core.msbfs``; ``--ndev N`` swaps in the
-sharded ``repro.core.dist_msbfs``) never drains between requests, and the
-requests themselves are no longer only BFS roots. Every analytics query
-type that reduces to lane traversals rides the same bit-lane pool:
+The serving loop itself lives in ``repro.serving.AnalyticsService``:
+admission control (bounded pending queue, per-tenant quotas), FIFO
+dispatch into the packed MS-BFS and delta-stepping tropical lane pools,
+and mid-sweep STREAMING read-outs — a depth-k ``khop`` (or ``reach``)
+request is answered the moment its lane's layer counter passes k,
+bit-identical to the offline ``run_query`` answer, and its lane is
+retired back to the pool. This module provides:
 
-* ``bfs``       — one root, full traversal (parents/depths);
-* ``khop``      — one root, answer = the depth <= k band of its lane
-                  (read from the dense depth column here; the offline
-                  ``analytics.khop`` query exposes the same band as
-                  packed ``MSBFSResult.reached_words``);
-* ``reach``     — one root + target vertex, answer = hop distance;
-* ``closeness`` — a sampled-source centrality estimate: S roots enqueued
-                  as one request, answered when ALL S lanes flush, the
-                  estimator is ``analytics.closeness.closeness_from_depths``;
-* ``sssp``      — one source, WEIGHTED shortest paths: the request rides a
-                  dense tropical lane of the delta-stepping engine
-                  (``repro.traversal.sssp``) stepped side by side with the
-                  packed engine in the same loop — the two engines share
-                  the arrival schedule and the layer clock, so sojourn
-                  stats stay comparable across boolean and weighted
-                  queries. Needs a weighted graph (the harness generates
-                  ``rmat_weighted_graph``; plain CSR still works for
-                  boolean-only mixes).
-
-Each enqueued request is tagged with its query type; the loop reports
-per-type sojourn (arrival layer -> answer layer) and latency statistics on
-top of the aggregate TEPS / occupancy numbers, so a mixed workload shows
-which query class is starving.
+* ``main`` — the CLI: generate an R-MAT graph, build a deterministic
+  mixed-workload trace (``repro.serving.trace.synthetic_trace`` — every
+  request is an ``AnalyticsRequest`` envelope, so the CLI and
+  ``run_query`` route through the SAME tag registry and handler table),
+  replay it through the service, print the stats JSON;
+* ``serve`` / ``Request`` / ``make_requests`` / ``bfs_requests`` — the
+  PR-5 compatibility surface: the old tuple-tagged request API
+  implemented ON TOP of the service (streaming off, single epoch) so the
+  flush-time answers, sojourn accounting, and BFS-tree validation of the
+  original loop are preserved exactly.
 
   PYTHONPATH=src python -m repro.launch.serve_bfs --scale 12 --lanes 32 \
       --queries 64 --mix bfs:4,khop:2,reach:1,closeness:1,sssp:2 \
-      --burst 4 --every 2 [--validate] [--ndev 4] [--delta 0.05]
+      --burst 4 --every 2 [--validate] [--ndev 4] [--delta 0.05] \
+      [--slots 256] [--tenants 2] [--tenant-quota 16] [--no-streaming]
 
-``--lanes 0`` sizes the bit-lane pool adaptively; latency is measured in
-engine *layers* (the deterministic unit of work), so runs are
-reproducible. Aggregate TEPS counts the packed engine's traversed edges
-only (weighted relaxation work is reported as ``sssp_steps``).
+Latency is measured in engine *layers* (the deterministic unit of work);
+aggregate TEPS counts the packed engine's traversed edges only (weighted
+relaxation work is reported as ``sssp_steps``).
 """
 from __future__ import annotations
 
 import argparse
 import json
-import time
 from dataclasses import dataclass, field
 
-import jax
 import numpy as np
 
+from repro.analytics.api import (AnalyticsRequest, BFSQuery, ClosenessQuery,
+                                 KHopQuery, ReachQuery, SSSPQuery)
+from repro.analytics.api import QUERY_KINDS as _API_KINDS
 from repro.core.csr import WeightedCSRGraph
-from repro.core.hybrid import ALPHA_DEFAULT, BETA_DEFAULT
-from repro.core.msbfs import (adaptive_lane_pool, msbfs_engine_enqueue,
-                              msbfs_engine_idle, msbfs_engine_init,
-                              msbfs_engine_result, msbfs_engine_step)
 from repro.graph.generator import rmat_weighted_graph, sample_roots
-from repro.graph.validate import validate_bfs_tree
+from repro.serving import AnalyticsService, ServiceConfig
+from repro.serving.trace import parse_mix, synthetic_trace
 
+# the streamable subset of the query registry this harness's compat
+# surface understands (whole-graph kinds go through the service's inline
+# batch path and have no tuple-tagged Request spelling)
 QUERY_KINDS = ("bfs", "khop", "reach", "closeness", "sssp")
+assert set(QUERY_KINDS) <= set(_API_KINDS)
 
 
 @dataclass
@@ -76,31 +67,21 @@ def bfs_requests(roots) -> list[Request]:
     return [Request("bfs", np.asarray([r], np.int32)) for r in roots]
 
 
-def _parse_mix(spec: str) -> dict[str, float]:
-    """'bfs:4,khop:2' -> normalized weights; bare names weigh 1."""
-    weights = {}
-    for part in spec.split(","):
-        name, _, w = part.strip().partition(":")
-        if name not in QUERY_KINDS:
-            raise ValueError(f"unknown query type {name!r} in mix {spec!r} "
-                             f"— expected {QUERY_KINDS}")
-        weights[name] = float(w) if w else 1.0
-        if weights[name] < 0:
-            raise ValueError(
-                f"negative weight for {name!r} in mix {spec!r}")
-    total = sum(weights.values())
-    if total <= 0:
-        raise ValueError(f"mix {spec!r} has no positive weight")
-    return {k: v / total for k, v in weights.items()}
-
-
 def make_requests(g, num: int, mix: str = "bfs", seed: int = 0,
                   khop_k: int = 2, closeness_sources: int = 8,
                   ) -> list[Request]:
-    """Draw ``num`` requests from the workload mix. Roots follow the
-    Graph500 sampling rule (degree > 0); reach targets are arbitrary
-    vertices (unreachable answers are part of the workload)."""
-    weights = _parse_mix(mix)
+    """Draw ``num`` requests from the workload mix (tags validated by
+    ``repro.serving.trace.parse_mix`` — the ONE registry-backed error
+    path). Roots follow the Graph500 sampling rule (degree > 0); reach
+    targets are arbitrary vertices (unreachable answers are part of the
+    workload)."""
+    weights = parse_mix(mix)
+    bad = sorted(set(weights) - set(QUERY_KINDS))
+    if bad:
+        raise ValueError(
+            f"mix {mix!r} includes non-streamable tags {bad} — the "
+            f"tuple-tagged request surface serves {QUERY_KINDS}; submit "
+            f"those kinds to AnalyticsService as envelopes instead")
     rng = np.random.default_rng(seed)
     kinds = rng.choice(list(weights), size=num, p=list(weights.values()))
     # a degree>0 pool for traversal roots; requests may reuse roots (they
@@ -133,111 +114,52 @@ def make_requests(g, num: int, mix: str = "bfs", seed: int = 0,
     return out
 
 
-def _engine(g, mode: str, probe_impl: str, ndev: int):
-    """(init, enqueue, step, idle, result) for the chosen engine — the
-    serving loop is engine-agnostic; only these five calls differ between
-    the single-host and the sharded pipelined engine."""
-    if ndev <= 1:
-        return (
-            lambda cap, lanes: msbfs_engine_init(g, capacity=cap,
-                                                 lanes=lanes),
-            msbfs_engine_enqueue,
-            lambda s: msbfs_engine_step(g, s, mode, ALPHA_DEFAULT,
-                                        BETA_DEFAULT, 8, probe_impl),
-            msbfs_engine_idle,
-            lambda s, parents=True: msbfs_engine_result(
-                g, s, derive_parents=parents),
-        )
-    from repro.core import dist_msbfs as dm
-    mesh = dm.host_mesh(ndev)
-    dg = dm.partition_graph(g, ndev)
-    return (
-        lambda cap, lanes: dm.dist_msbfs_engine_init(dg, mesh, cap, lanes),
-        dm.dist_msbfs_engine_enqueue,
-        lambda s: dm.dist_msbfs_engine_step(dg, s, mesh, mode,
-                                            ALPHA_DEFAULT, BETA_DEFAULT, 8,
-                                            probe_impl),
-        dm.dist_msbfs_engine_idle,
-        lambda s, parents=True: dm.dist_msbfs_engine_result(
-            dg, s, mesh, derive_parents=parents),
-    )
+def _to_envelope(req: Request, arrival: int) -> AnalyticsRequest:
+    """Lift a tuple-tagged compat request into the unified envelope —
+    explicit sources everywhere, so the service's answers reproduce the
+    old loop's references bit-for-bit."""
+    roots = tuple(int(r) for r in req.roots)
+    if req.qtype == "bfs":
+        q = BFSQuery(sources=roots)
+    elif req.qtype == "khop":
+        q = KHopQuery(sources=roots, k=int(req.k))
+    elif req.qtype == "reach":
+        q = ReachQuery(sources=roots, targets=(int(req.target),))
+    elif req.qtype == "closeness":
+        q = ClosenessQuery(sources=roots, chunk=len(roots))
+    elif req.qtype == "sssp":
+        q = SSSPQuery(sources=roots)   # delta pinned at the service level
+    else:
+        raise ValueError(
+            f"unknown query type {req.qtype!r} — expected {QUERY_KINDS}")
+    return AnalyticsRequest(query=q, arrival=int(arrival))
 
 
-def _sssp_engine(wg: WeightedCSRGraph, probe_impl: str, ndev: int,
-                 delta):
-    """(init, enqueue, step, idle, result) for the tropical engine —
-    the weighted mirror of ``_engine``: ndev<=1 runs the host
-    delta-stepping engine, ndev>1 the 1-D sharded ``dist_sssp`` over the
-    shared exchange (bit-identical per ``tests/test_dist_sssp.py``, so
-    the serving answers cannot depend on the partition)."""
-    if ndev <= 1:
-        from repro.traversal.sssp import (sssp_engine_enqueue,
-                                          sssp_engine_idle,
-                                          sssp_engine_init,
-                                          sssp_engine_result,
-                                          sssp_engine_step)
-        return (
-            lambda cap, lanes: sssp_engine_init(wg, cap, lanes),
-            sssp_engine_enqueue,
-            lambda s: sssp_engine_step(wg, s, delta, 8, probe_impl),
-            sssp_engine_idle,
-            sssp_engine_result,
-        )
-    from repro.core import dist_sssp as ds
-    mesh = ds.host_mesh(ndev)
-    dwg = ds.partition_weighted_graph(wg, ndev)
-    return (
-        lambda cap, lanes: ds.dist_sssp_engine_init(dwg, mesh, cap, lanes),
-        ds.dist_sssp_engine_enqueue,
-        lambda s: ds.dist_sssp_engine_step(dwg, s, mesh, delta, 8,
-                                           probe_impl),
-        ds.dist_sssp_engine_idle,
-        lambda s: ds.dist_sssp_engine_result(dwg, s),
-    )
+def _compat_answer(req: Request, result) -> dict:
+    """The old loop's per-request answer dict from the typed result."""
+    if req.qtype == "bfs":
+        d = np.asarray(result.depth)[:, 0]
+        return dict(reached=int((d >= 0).sum()), layers=int(d.max()) + 1)
+    if req.qtype == "khop":
+        return dict(k=req.k, size=int(result.counts[0]))
+    if req.qtype == "reach":
+        hops = int(result.hops[0, 0])
+        return dict(target=req.target, hops=hops, reachable=hops >= 0)
+    if req.qtype == "closeness":
+        c = result.closeness
+        v = int(np.argmax(c))
+        return dict(sources=int(req.roots.size), top_vertex=v,
+                    top_closeness=float(c[v]))
+    d = np.asarray(result.dist)[:, 0]
+    fin = np.isfinite(d)
+    return dict(reached=int(fin.sum()),
+                max_dist=float(d[fin].max()) if fin.any() else 0.0,
+                truncated=bool(result.truncated_lanes.any()))
 
 
-def _sojourn_stats(sojourn: np.ndarray) -> dict:
-    return dict(
-        mean=float(sojourn.mean()), p50=float(np.percentile(sojourn, 50)),
-        p95=float(np.percentile(sojourn, 95)), max=int(sojourn.max()))
-
-
-def _answers(g, requests: list[Request], depth: np.ndarray,
-             sssp_res=None) -> dict:
-    """Post-process each request's lanes into its typed answer; returns a
-    small per-type summary for the stats dict. Boolean requests index the
-    packed engine's ``depth`` columns, sssp requests the tropical
-    engine's result columns (each engine numbers its own slots)."""
-    from repro.analytics.closeness import closeness_from_depths
-    n = g.n
+def _answers_summary(requests: list[Request]) -> dict:
+    """Per-type answer summary (the old stats['answers'] block)."""
     summary: dict[str, dict] = {}
-    for req in requests:
-        if req.qtype == "sssp":
-            d = np.asarray(sssp_res.dist)[:, req.slots]
-            fin = np.isfinite(d[:, 0])
-            req.answer = dict(
-                reached=int(fin.sum()),
-                max_dist=float(d[fin, 0].max()) if fin.any() else 0.0,
-                # a capped lane's distances are partial — the answer says so
-                truncated=bool(
-                    np.asarray(sssp_res.truncated)[req.slots].any()))
-            continue
-        d = depth[:, req.slots]
-        if req.qtype == "bfs":
-            req.answer = dict(reached=int((d[:, 0] >= 0).sum()),
-                              layers=int(d[:, 0].max()) + 1)
-        elif req.qtype == "khop":
-            band = (d[:, 0] >= 0) & (d[:, 0] <= req.k)
-            req.answer = dict(k=req.k, size=int(band.sum()))
-        elif req.qtype == "reach":
-            hops = int(d[req.target, 0])
-            req.answer = dict(target=req.target, hops=hops,
-                              reachable=hops >= 0)
-        elif req.qtype == "closeness":
-            c = closeness_from_depths(d, n)
-            v = int(np.argmax(c))
-            req.answer = dict(sources=int(req.roots.size), top_vertex=v,
-                              top_closeness=float(c[v]))
     summary["bfs"] = dict(mean_reached=float(np.mean(
         [r.answer["reached"] for r in requests if r.qtype == "bfs"] or [0])))
     summary["khop"] = dict(mean_size=float(np.mean(
@@ -262,23 +184,23 @@ def serve(g, requests: list[Request], lanes: int, burst: int, every: int,
     time every ``every`` layers; run until all are answered. Returns
     serving statistics with per-query-type sojourn breakdowns.
 
-    Boolean requests (bfs/khop/reach/closeness) ride the packed MS-BFS
-    engine; ``sssp`` requests ride the delta-stepping tropical engine,
-    stepped in the SAME loop iteration so both share the arrival schedule
-    and the layer clock. ``lanes=0`` picks the packed pool width
-    adaptively; ``ndev>1`` shards BOTH engines over the same device pool
-    (the packed one via ``dist_msbfs``, the tropical one via
-    ``dist_sssp`` — answers are bit-identical to the host engines);
-    ``delta=None`` uses the weighted graph's default bucket width."""
+    This is the compatibility surface over ``AnalyticsService``: one
+    epoch sized to the exact lane demand, streaming OFF (every answer at
+    lane flush — the validator needs complete depth columns and BFS-tree
+    parents), ``lanes=0`` adaptive pool sizing, ``ndev>1`` sharding both
+    engines, ``delta=None`` the weighted default — all exactly the old
+    loop's semantics, now scheduled by the service."""
     wg = g if isinstance(g, WeightedCSRGraph) else None
-    if wg is not None:
-        g = wg.csr
     num_req = len(requests)
     if num_req < 1:
         raise ValueError("need at least one request")
     if burst < 1 or every < 1:
         raise ValueError(f"burst and every must be >= 1, "
                          f"got burst={burst} every={every}")
+    for r in requests:
+        if r.qtype not in QUERY_KINDS:
+            raise ValueError(
+                f"unknown query type {r.qtype!r} — expected {QUERY_KINDS}")
     sssp_reqs = [r for r in requests if r.qtype == "sssp"]
     if sssp_reqs and wg is None:
         raise ValueError("sssp requests need a WeightedCSRGraph — "
@@ -288,103 +210,32 @@ def serve(g, requests: list[Request], lanes: int, burst: int, every: int,
                        if r.qtype != "sssp"))
     sssp_cap = int(sum(r.roots.size for r in sssp_reqs))
     if not lanes:
-        lanes = adaptive_lane_pool(max(bool_cap, 1), g.n, g.m)
+        from repro.core.msbfs import adaptive_lane_pool
+        base = wg.csr if wg is not None else g
+        lanes = adaptive_lane_pool(max(bool_cap, 1), base.n, base.m)
+    from repro.traversal.sssp import DEFAULT_LANES
+    svc = AnalyticsService(g, ServiceConfig(
+        lanes=int(lanes), slots=max(bool_cap, 1),
+        sssp_lanes=max(1, min(lanes, max(sssp_cap, 1), DEFAULT_LANES)),
+        sssp_slots=max(sssp_cap, 1),
+        max_pending=num_req + 1, mode=mode, probe_impl=probe_impl,
+        ndev=ndev, delta=delta, streaming=False))
+    svc.warmup(packed=bool_cap > 0, tropical=sssp_cap > 0)
 
-    state = sstate = None
-    if bool_cap:
-        eng_init, eng_enqueue, eng_step, eng_idle, eng_result = _engine(
-            g, mode, probe_impl, ndev)
-        state = eng_init(bool_cap, lanes)
-    if sssp_cap:
-        from repro.traversal.sssp import DEFAULT_LANES, default_delta
-        if delta is None:
-            delta = default_delta(wg)
-        sssp_lanes = max(1, min(lanes, sssp_cap, DEFAULT_LANES))
-        (sssp_init, sssp_enqueue, sssp_step, sssp_idle,
-         sssp_result) = _sssp_engine(wg, probe_impl, ndev, float(delta))
-        sstate = sssp_init(sssp_cap, sssp_lanes)
+    pairs = [(req, _to_envelope(req, (i // burst) * every))
+             for i, req in enumerate(requests)]
+    svc.replay([env for _, env in pairs])
 
-    arrival = np.full(num_req, -1, np.int64)   # layer the request arrived
-    answered = np.full(num_req, -1, np.int64)  # layer it was fully answered
-    occupancy = []
+    for req, env in pairs:
+        rec = svc.record(env.id)
+        req.slots = rec.slots
+        req.answer = _compat_answer(req, rec.answer.result)
 
-    slot_hi = {"bool": 0, "sssp": 0}           # per-engine slot numbering
-
-    def enqueue(s, ss, lo, hi, layer):
-        for req in requests[lo:hi]:
-            kind = "sssp" if req.qtype == "sssp" else "bool"
-            req.slots = slice(slot_hi[kind], slot_hi[kind] + req.roots.size)
-            slot_hi[kind] += req.roots.size
-            if kind == "sssp":
-                ss = sssp_enqueue(ss, req.roots)
-            else:
-                s = eng_enqueue(s, req.roots)
-        arrival[lo:hi] = layer
-        return s, ss
-
-    # warm the step executables on throwaway states so the serving window
-    # measures traversal, not one-time XLA compilation (same discipline as
-    # the graph500 harness's warmup)
-    if bool_cap:
-        first = next(r for r in requests if r.qtype != "sssp")
-        jax.block_until_ready(
-            eng_step(eng_enqueue(state, first.roots[:1])).out_depth)
-    if sssp_cap:
-        jax.block_until_ready(sssp_step(
-            sssp_enqueue(sstate, sssp_reqs[0].roots[:1])).out_dist)
-
-    state, sstate = enqueue(state, sstate, 0, min(burst, num_req), 0)
-    fed = min(burst, num_req)
-    layer = 0
-
-    def all_idle():
-        return ((state is None or eng_idle(state))
-                and (sstate is None or sssp_idle(sstate)))
-
-    t0 = time.perf_counter()
-    while fed < num_req or not all_idle():
-        if state is not None and not eng_idle(state):
-            state = eng_step(state)
-        if sstate is not None and not sssp_idle(sstate):
-            sstate = sssp_step(sstate)
-        layer += 1
-        occ = 0
-        if state is not None:
-            occ += int(np.sum(np.asarray(state.lane_qidx) < bool_cap))
-        if sstate is not None:
-            occ += int(np.sum(np.asarray(sstate.lane_qidx) < sssp_cap))
-        occupancy.append(occ)
-        done_bool = (np.asarray(state.out_layers[:bool_cap]) > 0
-                     if state is not None else None)
-        done_sssp = (np.asarray(sstate.out_steps[:sssp_cap]) > 0
-                     if sstate is not None else None)
-        for i, req in enumerate(requests[:fed]):
-            done = done_sssp if req.qtype == "sssp" else done_bool
-            if answered[i] < 0 and done[req.slots].all():
-                answered[i] = layer   # a request answers when EVERY lane has
-        if layer % every == 0 and fed < num_req:
-            nxt = min(fed + burst, num_req)
-            state, sstate = enqueue(state, sstate, fed, nxt, layer)
-            fed = nxt
-    if state is not None:
-        jax.block_until_ready(state.out_depth)
-    if sstate is not None:
-        jax.block_until_ready(sstate.out_dist)
-    wall = time.perf_counter() - t0
-
-    # parents cost an O(m) scatter-min pass per lane chunk and only the
-    # validator reads them — the answers post-processing is depth-only
-    depth = sssp_res = None
-    edges = 0
-    if state is not None:
-        out = eng_result(state, validate)
-        depth = np.asarray(out.depth)
-        edges = int(np.asarray(out.edges_traversed).sum()) // 2
-    if sstate is not None:
-        sssp_res = sssp_result(sstate)
-    if validate and state is not None:
+    if validate and bool_cap:
         from repro.core.csr import to_numpy_adj
-        rp, ci = to_numpy_adj(g)
+        from repro.graph.validate import validate_bfs_tree
+        out = svc.packed_result(derive_parents=True)
+        rp, ci = to_numpy_adj(svc.engine.g)
         parent = np.asarray(out.parent)
         for req in requests:
             if req.qtype == "sssp":   # tropical lanes carry no BFS tree
@@ -393,27 +244,20 @@ def serve(g, requests: list[Request], lanes: int, burst: int, every: int,
                 validate_bfs_tree(                 # BFS tree, whatever the tag
                     rp, ci, parent[:, req.slots][:, j], int(r))
 
-    sojourn = answered - arrival
-    qtypes = np.asarray([r.qtype for r in requests])
-    per_type = {
-        kind: dict(count=int((qtypes == kind).sum()),
-                   lanes=int(sum(r.roots.size for r in requests
-                                 if r.qtype == kind)),
-                   sojourn_layers=_sojourn_stats(sojourn[qtypes == kind]))
-        for kind in QUERY_KINDS if (qtypes == kind).any()}
+    s = svc.stats()
     stats = dict(
-        requests=num_req, total_lanes=bool_cap + sssp_cap, lanes=lanes,
-        ndev=ndev, layers=layer, wall_s=round(wall, 4),
-        sojourn_layers=_sojourn_stats(sojourn),
-        per_type=per_type,
-        answers=_answers(g, requests, depth, sssp_res),
-        mean_lane_occupancy=float(np.mean(occupancy)),
-        aggregate_mteps=round(edges / wall / 1e6, 2) if wall > 0 else 0.0,
-        validated=bool(validate and state is not None),
+        requests=num_req, total_lanes=bool_cap + sssp_cap,
+        lanes=int(lanes), ndev=ndev, layers=s["layers"],
+        wall_s=s["wall_s"], sojourn_layers=s["sojourn_layers"],
+        per_type=s["per_type"],
+        answers=_answers_summary(requests),
+        mean_lane_occupancy=s["mean_lane_occupancy"],
+        aggregate_mteps=s["aggregate_mteps"],
+        validated=bool(validate and bool_cap),
     )
-    if sstate is not None:
-        stats["delta"] = float(delta)
-        stats["sssp_steps"] = int(sstate.sweep_steps)
+    if sssp_cap:
+        stats["delta"] = float(svc.delta)
+        stats["sssp_steps"] = s["sssp_steps"]
     return stats
 
 
@@ -431,7 +275,8 @@ def main():
                          "--closeness-sources lanes)")
     ap.add_argument("--mix", default="bfs",
                     help="workload mix, e.g. bfs:4,khop:2,reach:1,"
-                         "closeness:1,sssp:1 (weights optional)")
+                         "closeness:1,sssp:1 (weights optional; any tag "
+                         "from the analytics registry)")
     ap.add_argument("--delta", type=float, default=None,
                     help="delta-stepping bucket width for sssp requests "
                          "(default: the graph's default_delta)")
@@ -442,22 +287,52 @@ def main():
                     help="requests arriving per burst")
     ap.add_argument("--every", type=int, default=2,
                     help="layers between arrival bursts")
+    ap.add_argument("--slots", type=int, default=256,
+                    help="packed queue slots per epoch")
+    ap.add_argument("--sssp-slots", type=int, default=64,
+                    help="tropical queue slots per epoch")
+    ap.add_argument("--max-pending", type=int, default=1024,
+                    help="admission bound on the pending queue")
+    ap.add_argument("--tenant-quota", type=int, default=None,
+                    help="per-tenant in-flight request cap")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="synthetic tenants, assigned round-robin")
+    ap.add_argument("--no-streaming", action="store_true",
+                    help="disable mid-sweep read-outs (answer at flush)")
     ap.add_argument("--mode", default="hybrid",
                     choices=("hybrid", "topdown", "bottomup"))
     ap.add_argument("--probe-impl", default="xla", choices=("xla", "pallas"))
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--validate", action="store_true")
+    ap.add_argument("--validate", action="store_true",
+                    help="validate BFS trees (forces the flush-time "
+                         "compat path: one exact-capacity epoch)")
     args = ap.parse_args()
 
     # weights always ride along: the CSR is bit-identical to rmat_graph's,
     # boolean-only mixes simply never read them
     g = rmat_weighted_graph(args.scale, args.edgefactor, args.seed)
-    requests = make_requests(g, args.queries, mix=args.mix, seed=args.seed,
-                             khop_k=args.khop_k,
-                             closeness_sources=args.closeness_sources)
-    stats = serve(g, requests, args.lanes, args.burst, args.every,
-                  mode=args.mode, probe_impl=args.probe_impl,
-                  validate=args.validate, ndev=args.ndev, delta=args.delta)
+    if args.validate:
+        requests = make_requests(g, args.queries, mix=args.mix,
+                                 seed=args.seed, khop_k=args.khop_k,
+                                 closeness_sources=args.closeness_sources)
+        stats = serve(g, requests, args.lanes, args.burst, args.every,
+                      mode=args.mode, probe_impl=args.probe_impl,
+                      validate=True, ndev=args.ndev, delta=args.delta)
+        print(json.dumps(stats, indent=2))
+        return
+    weights = parse_mix(args.mix)
+    trace = synthetic_trace(
+        g.n, args.queries, mix=args.mix, seed=args.seed,
+        khop_k=args.khop_k, closeness_sources=args.closeness_sources,
+        burst=args.burst, every=args.every,
+        tenants=tuple(f"tenant{i}" for i in range(max(args.tenants, 1))))
+    svc = AnalyticsService(g, ServiceConfig(
+        lanes=args.lanes, slots=args.slots, sssp_slots=args.sssp_slots,
+        max_pending=args.max_pending, tenant_quota=args.tenant_quota,
+        mode=args.mode, probe_impl=args.probe_impl, ndev=args.ndev,
+        delta=args.delta, streaming=not args.no_streaming))
+    svc.warmup(tropical="sssp" in weights)
+    stats = svc.replay(trace)
     print(json.dumps(stats, indent=2))
 
 
