@@ -17,6 +17,8 @@
 #                         bytes-exchanged-per-step, dense vs compressed
 #   make bench-serve      AnalyticsService replay: streamed-vs-flush trace,
 #                         mix TEPS + p50/p99 sojourn + early-answer gain
+#   make trace-smoke      mixed-workload serve run -> sweep_trace.json
+#                         (Perfetto-loadable) + sweep_metrics.txt scrape
 #   make ci-bench         fast benches -> BENCH_pr.json + regression gate
 #   make lint             ruff check + format check (rule set: ruff.toml)
 
@@ -25,7 +27,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-properties test-dist bench-smoke bench bench-dist \
         bench-dist2d bench-analytics bench-sssp bench-dist-sssp \
-        bench-serve ci-bench lint
+        bench-serve trace-smoke ci-bench lint
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -65,6 +67,9 @@ bench-dist-sssp:
 
 bench-serve:
 	$(PYTHON) benchmarks/serve_bench.py --scale 12
+
+trace-smoke:
+	$(PYTHON) examples/sweep_trace.py
 
 ci-bench:
 	$(PYTHON) benchmarks/ci_bench.py --out BENCH_pr.json \

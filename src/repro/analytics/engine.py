@@ -67,9 +67,12 @@ class LaneEngine:
                  compress: bool = False, lanes: int | None = None,
                  mode: str = "hybrid", alpha: float = ALPHA_DEFAULT,
                  beta: float = BETA_DEFAULT, max_pos: int = 8,
-                 probe_impl: str = "xla"):
+                 probe_impl: str = "xla", telemetry=None):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        # a repro.obs.Telemetry bundle; None (the default) keeps every
+        # sweep on the recorder-off fused-drain path
+        self.telemetry = telemetry
         self.wg = g if isinstance(g, WeightedCSRGraph) else None
         self.g = g.csr if self.wg is not None else g
         g = self.g
@@ -133,6 +136,14 @@ class LaneEngine:
             return self.lanes
         return adaptive_lane_pool(num_roots, self.n, self.m)
 
+    def _recorder(self, engine_name: str, **meta):
+        """A fresh per-sweep ``SweepRecorder`` from the telemetry bundle
+        (None when telemetry is absent or sweep recording is off — the
+        drivers then take their fused-drain fast path)."""
+        if self.telemetry is None:
+            return None
+        return self.telemetry.recorder(engine_name, ndev=self.ndev, **meta)
+
     def sweep(self, roots, derive_parents: bool = False) -> MSBFSResult:
         """One pipelined engine sweep; ``depth`` is [n, R] with the
         original vertex count regardless of ndev. By default ``parent``
@@ -150,16 +161,19 @@ class LaneEngine:
                                 self.alpha, self.beta, self.max_pos,
                                 self.probe_impl, lanes=lanes,
                                 compress=self.compress,
-                                derive_parents=derive_parents)
+                                derive_parents=derive_parents,
+                                recorder=self._recorder("dist2d"))
         if self.dg is not None:
             from repro.core.dist_msbfs import dist_msbfs
             return dist_msbfs(self.dg, roots, self.mesh, self.mode,
                               self.alpha, self.beta, self.max_pos,
                               self.probe_impl, lanes=lanes,
-                              derive_parents=derive_parents)
+                              derive_parents=derive_parents,
+                              recorder=self._recorder("dist_msbfs"))
         return msbfs_pipelined(self.g, roots, self.mode, self.alpha,
                                self.beta, self.max_pos, self.probe_impl,
-                               lanes, derive_parents=derive_parents)
+                               lanes, derive_parents=derive_parents,
+                               recorder=self._recorder("msbfs"))
 
     @property
     def weighted(self) -> bool:
@@ -202,17 +216,20 @@ class LaneEngine:
             return dist2d_sssp(self.dwg2, roots, self.mesh, delta=delta,
                                lanes=lanes, max_pos=self.max_pos,
                                relax_impl=self.probe_impl,
-                               compress=self.compress)
+                               compress=self.compress,
+                               recorder=self._recorder("dist2d_sssp"))
         if self.dwg is not None:
             from repro.core.dist_sssp import dist_sssp
             return dist_sssp(self.dwg, roots, self.mesh, delta=delta,
                              lanes=lanes, max_pos=self.max_pos,
-                             relax_impl=self.probe_impl)
+                             relax_impl=self.probe_impl,
+                             recorder=self._recorder("dist_sssp"))
         from repro.traversal.sssp import sssp_pipelined
         return sssp_pipelined(self.wg, roots, delta=delta,
                               lanes=lanes,
                               max_pos=self.max_pos,
-                              relax_impl=self.probe_impl)
+                              relax_impl=self.probe_impl,
+                              recorder=self._recorder("sssp"))
 
 
 def as_engine(g_or_engine, **kwargs) -> LaneEngine:

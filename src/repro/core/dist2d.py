@@ -587,14 +587,17 @@ def dist2d_msbfs(dg: DistGraph2D, roots, mesh: Mesh, mode: str = "hybrid",
                  alpha: float = ALPHA_DEFAULT, beta: float = BETA_DEFAULT,
                  max_pos: int = 8, probe_impl: str = "xla",
                  lanes: int | None = None, compress: bool = False,
-                 derive_parents: bool = True) -> MSBFSResult:
+                 derive_parents: bool = True, recorder=None) -> MSBFSResult:
     """Answer an arbitrary number of roots with ONE 2-D engine sweep.
 
     ``compress=True`` ships both per-layer exchanges through the sparse
     frontier-word codec whenever the gather group is below the density
     threshold (wire bytes then track the frontier population — results
     are bit-identical either way). ``lanes=None`` sizes the pool
-    adaptively, as in the other engines."""
+    adaptively, as in the other engines. ``recorder`` (a ``repro.obs
+    .SweepRecorder``) steps layer-by-layer recording a ``LayerRecord``
+    each — including this engine's per-layer ``exch_bytes`` delta —
+    bit-identical to the fused drain; None touches nothing in obs."""
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     roots = jnp.asarray(roots, jnp.int32).reshape(-1)
@@ -608,7 +611,18 @@ def dist2d_msbfs(dg: DistGraph2D, roots, mesh: Mesh, mode: str = "hybrid",
     state = dist2d_msbfs_engine_init(dg, mesh, capacity=num_roots,
                                      lanes=lanes)
     state = dist2d_msbfs_engine_enqueue(state, roots)
-    state = dist2d_msbfs_engine_drain(dg, state, mesh, mode, alpha, beta,
-                                      max_pos, probe_impl, compress)
+    if recorder is None:
+        state = dist2d_msbfs_engine_drain(dg, state, mesh, mode, alpha,
+                                          beta, max_pos, probe_impl,
+                                          compress)
+    else:
+        from repro.obs.sweeplog import drive_recorded
+        state = drive_recorded(
+            recorder, state,
+            lambda s: dist2d_msbfs_engine_step(dg, s, mesh, mode, alpha,
+                                               beta, max_pos, probe_impl,
+                                               compress),
+            dist2d_msbfs_engine_idle, kind="bfs",
+            exch_format="compressed" if compress else "dense")
     return dist2d_msbfs_engine_result(dg, state, mesh,
                                       derive_parents=derive_parents)

@@ -510,8 +510,8 @@ def host_mesh(ndev: int) -> Mesh:
 def dist_msbfs(dg: DistGraph, roots, mesh: Mesh, mode: str = "hybrid",
                alpha: float = ALPHA_DEFAULT, beta: float = BETA_DEFAULT,
                max_pos: int = 8, probe_impl: str = "xla",
-               lanes: int | None = None,
-               derive_parents: bool = True) -> MSBFSResult:
+               lanes: int | None = None, derive_parents: bool = True,
+               recorder=None) -> MSBFSResult:
     """Answer an arbitrary number of roots with ONE sharded engine sweep.
 
     ``lanes=None`` (or 0) sizes the bit-lane pool adaptively from the pending
@@ -519,6 +519,11 @@ def dist_msbfs(dg: DistGraph, roots, mesh: Mesh, mode: str = "hybrid",
     — the ROADMAP rung); pass an int to pin the pool width. Every lane's
     depths/parents match serial ``bfs()`` exactly and pass the Graph500
     spec-4 validator; results are trimmed to the original vertex count.
+
+    ``recorder`` (a ``repro.obs.SweepRecorder``) records a ``LayerRecord``
+    per layer by stepping the engine instead of the fused drain — step
+    and drain share the sharded body, so results and traces are
+    bit-identical; None (the default) touches nothing in ``repro.obs``.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -533,7 +538,15 @@ def dist_msbfs(dg: DistGraph, roots, mesh: Mesh, mode: str = "hybrid",
     lanes = max(1, min(lanes, LANE_WORD_BITS * num_lane_words(num_roots)))
     state = dist_msbfs_engine_init(dg, mesh, capacity=num_roots, lanes=lanes)
     state = dist_msbfs_engine_enqueue(state, roots)
-    state = dist_msbfs_engine_drain(dg, state, mesh, mode, alpha, beta,
-                                    max_pos, probe_impl)
+    if recorder is None:
+        state = dist_msbfs_engine_drain(dg, state, mesh, mode, alpha, beta,
+                                        max_pos, probe_impl)
+    else:
+        from repro.obs.sweeplog import drive_recorded
+        state = drive_recorded(
+            recorder, state,
+            lambda s: dist_msbfs_engine_step(dg, s, mesh, mode, alpha,
+                                             beta, max_pos, probe_impl),
+            dist_msbfs_engine_idle, kind="bfs")
     return dist_msbfs_engine_result(dg, state, mesh,
                                     derive_parents=derive_parents)

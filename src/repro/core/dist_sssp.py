@@ -538,11 +538,14 @@ def dist_sssp_engine_result(dwg: DistWeightedGraph,
 def dist_sssp(dwg: DistWeightedGraph, roots, mesh: Mesh, delta=None,
               lanes: int = DEFAULT_LANES, max_pos: int = 8,
               relax_impl: str = "xla", max_steps: int = MAX_SSSP_STEPS,
-              compress: bool = False) -> SSSPResult:
+              compress: bool = False, recorder=None) -> SSSPResult:
     """Answer an arbitrary number of SSSP sources with ONE sharded sweep.
     ``delta=None`` picks the host's ``default_delta`` value (recomputed
     from the partition, bit-identical); distances/steps/truncation/traces
-    replay ``sssp_pipelined`` exactly on every partition shape."""
+    replay ``sssp_pipelined`` exactly on every partition shape.
+    ``recorder`` (a ``repro.obs.SweepRecorder``) steps the engine
+    recording a ``LayerRecord`` (incl. the per-step ``exch_bytes`` delta)
+    each phase — bit-identical to the drain; None touches nothing."""
     roots = jnp.asarray(roots, jnp.int32).reshape(-1)
     num_roots = roots.shape[0]
     if num_roots < 1:
@@ -553,8 +556,18 @@ def dist_sssp(dwg: DistWeightedGraph, roots, mesh: Mesh, delta=None,
     delta = delta if isinstance(delta, tuple) else float(delta)
     state = dist_sssp_engine_init(dwg, mesh, capacity=num_roots, lanes=lanes)
     state = dist_sssp_engine_enqueue(state, roots)
-    state = dist_sssp_engine_drain(dwg, state, mesh, delta, max_pos,
-                                   relax_impl, max_steps, compress)
+    if recorder is None:
+        state = dist_sssp_engine_drain(dwg, state, mesh, delta, max_pos,
+                                       relax_impl, max_steps, compress)
+    else:
+        from repro.obs.sweeplog import drive_recorded
+        state = drive_recorded(
+            recorder, state,
+            lambda s: dist_sssp_engine_step(dwg, s, mesh, delta, max_pos,
+                                            relax_impl, max_steps,
+                                            compress),
+            dist_sssp_engine_idle, kind="sssp",
+            exch_format="compressed" if compress else "dense")
     return dist_sssp_engine_result(dwg, state)
 
 
@@ -821,11 +834,13 @@ def dist2d_sssp_engine_result(dwg2: DistWeightedGraph2D,
 def dist2d_sssp(dwg2: DistWeightedGraph2D, roots, mesh: Mesh, delta=None,
                 lanes: int = DEFAULT_LANES, max_pos: int = 8,
                 relax_impl: str = "xla", max_steps: int = MAX_SSSP_STEPS,
-                compress: bool = False) -> SSSPResult:
+                compress: bool = False, recorder=None) -> SSSPResult:
     """Answer an arbitrary number of SSSP sources with ONE 2-D grid sweep.
     ``compress=True`` ships both per-step value exchanges through the
     sparse (index, payload) codec whenever the gather group is below the
-    density threshold — results are bit-identical either way."""
+    density threshold — results are bit-identical either way.
+    ``recorder`` records a ``LayerRecord`` per phase step as in the
+    other engines (None, the default, touches nothing in obs)."""
     roots = jnp.asarray(roots, jnp.int32).reshape(-1)
     num_roots = roots.shape[0]
     if num_roots < 1:
@@ -837,6 +852,16 @@ def dist2d_sssp(dwg2: DistWeightedGraph2D, roots, mesh: Mesh, delta=None,
     state = dist2d_sssp_engine_init(dwg2, mesh, capacity=num_roots,
                                     lanes=lanes)
     state = dist2d_sssp_engine_enqueue(state, roots)
-    state = dist2d_sssp_engine_drain(dwg2, state, mesh, delta, max_pos,
-                                     relax_impl, max_steps, compress)
+    if recorder is None:
+        state = dist2d_sssp_engine_drain(dwg2, state, mesh, delta, max_pos,
+                                         relax_impl, max_steps, compress)
+    else:
+        from repro.obs.sweeplog import drive_recorded
+        state = drive_recorded(
+            recorder, state,
+            lambda s: dist2d_sssp_engine_step(dwg2, s, mesh, delta,
+                                              max_pos, relax_impl,
+                                              max_steps, compress),
+            dist2d_sssp_engine_idle, kind="sssp",
+            exch_format="compressed" if compress else "dense")
     return dist2d_sssp_engine_result(dwg2, state)

@@ -631,8 +631,8 @@ def msbfs_engine_retire(g: CSRGraph, state: PipelineState,
 def msbfs_pipelined(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",
                     alpha: float = ALPHA_DEFAULT, beta: float = BETA_DEFAULT,
                     max_pos: int = 8, probe_impl: str = "xla",
-                    lanes: int = MAX_LANES,
-                    derive_parents: bool = True) -> MSBFSResult:
+                    lanes: int = MAX_LANES, derive_parents: bool = True,
+                    recorder=None) -> MSBFSResult:
     """Answer an arbitrary number of roots in ONE pipelined engine sweep.
 
     Splits R > ``lanes`` roots across bit-lane word-batches WITHOUT batch
@@ -641,6 +641,12 @@ def msbfs_pipelined(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",
     work, not by the deepest root of each 64-root batch. With R <= lanes
     the lane pool shrinks to ``ceil32(R)`` lanes and this reduces to the
     single-batch ``msbfs`` sweep (same packed steps, same results).
+
+    ``recorder`` (a ``repro.obs.SweepRecorder``) switches the fused drain
+    for a host step-loop that records a ``LayerRecord`` per layer — the
+    step and the drain share ``_pipeline_body``, so results and traces
+    are bit-identical either way; with ``recorder=None`` (the default)
+    nothing from ``repro.obs`` is imported or executed.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -652,6 +658,14 @@ def msbfs_pipelined(g: CSRGraph, roots: jnp.ndarray, mode: str = "hybrid",
     lanes = max(1, min(lanes, LANE_WORD_BITS * num_lane_words(num_roots)))
     state = msbfs_engine_init(g, capacity=num_roots, lanes=lanes)
     state = msbfs_engine_enqueue(state, roots)
-    state = msbfs_engine_drain(g, state, mode, alpha, beta, max_pos,
-                               probe_impl)
+    if recorder is None:
+        state = msbfs_engine_drain(g, state, mode, alpha, beta, max_pos,
+                                   probe_impl)
+    else:
+        from repro.obs.sweeplog import drive_recorded
+        state = drive_recorded(
+            recorder, state,
+            lambda s: msbfs_engine_step(g, s, mode, alpha, beta, max_pos,
+                                        probe_impl),
+            msbfs_engine_idle, kind="bfs")
     return msbfs_engine_result(g, state, derive_parents=derive_parents)

@@ -306,11 +306,25 @@ def main():
     ap.add_argument("--validate", action="store_true",
                     help="validate BFS trees (forces the flush-time "
                          "compat path: one exact-capacity epoch)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the service's Prometheus text exposition "
+                         "here after the run")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace JSON of "
+                         "request lifecycles + per-layer sweep records "
+                         "here after the run (enables sweep recording)")
     args = ap.parse_args()
+    if args.validate and (args.metrics_out or args.trace_out):
+        ap.error("--metrics-out/--trace-out ride the service path — "
+                 "drop --validate (the compat path has no telemetry)")
 
     # weights always ride along: the CSR is bit-identical to rmat_graph's,
     # boolean-only mixes simply never read them
     g = rmat_weighted_graph(args.scale, args.edgefactor, args.seed)
+    telemetry = None
+    if args.metrics_out or args.trace_out:
+        from repro.obs import Telemetry
+        telemetry = Telemetry(record_sweeps=bool(args.trace_out))
     if args.validate:
         requests = make_requests(g, args.queries, mix=args.mix,
                                  seed=args.seed, khop_k=args.khop_k,
@@ -330,9 +344,18 @@ def main():
         lanes=args.lanes, slots=args.slots, sssp_slots=args.sssp_slots,
         max_pending=args.max_pending, tenant_quota=args.tenant_quota,
         mode=args.mode, probe_impl=args.probe_impl, ndev=args.ndev,
-        delta=args.delta, streaming=not args.no_streaming))
+        delta=args.delta, streaming=not args.no_streaming,
+        telemetry=telemetry))
     svc.warmup(tropical="sssp" in weights)
     stats = svc.replay(trace)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(svc.metrics_text())
+        stats["metrics_out"] = args.metrics_out
+    if args.trace_out:
+        from repro.obs import write_chrome_trace
+        write_chrome_trace(args.trace_out, svc.trace_events())
+        stats["trace_out"] = args.trace_out
     print(json.dumps(stats, indent=2))
 
 

@@ -75,7 +75,12 @@ class ServiceConfig:
     width for the WHOLE service (delta is a compile-time constant of the
     engine executable) — sssp requests asking for a different width fall
     back to the inline batch path. ``streaming=False`` disables the
-    mid-sweep read-outs (answers wait for lane flush)."""
+    mid-sweep read-outs (answers wait for lane flush). ``telemetry`` is
+    a ``repro.obs.Telemetry`` bundle: its registry backs
+    ``service.metrics_text()`` and, when ``record_sweeps`` is on, every
+    pool epoch records a per-layer ``SweepRecorder`` stream (None — the
+    default — keeps the pools on the recorder-off fast path; a private
+    registry still serves the request/sojourn metrics)."""
     lanes: int = 0               # packed pool width; 0 = adaptive
     slots: int = 256             # packed queue slots per epoch
     sssp_lanes: int = 0          # tropical pool width; 0 = engine default
@@ -90,6 +95,7 @@ class ServiceConfig:
     ndev: int = 1
     delta: float | str | None = None
     streaming: bool = True
+    telemetry: object = None     # repro.obs.Telemetry bundle (optional)
 
     def __post_init__(self):
         if self.slots < 1 or self.sssp_slots < 1:
@@ -150,6 +156,10 @@ class _PackedPool:
         self.state = None
         self.epochs = 0
         self._edges_done = 0
+        self._kind = "bfs"
+        self.recorder = None     # live epoch's SweepRecorder (or None)
+        self._new_recorder = svc._sweep_recorder_factory(
+            "dist_msbfs" if eng.dg is not None else "msbfs")
         if eng.dg is not None:
             from repro.core import dist_msbfs as dm
             self._init = lambda: dm.dist_msbfs_engine_init(
@@ -186,6 +196,7 @@ class _PackedPool:
     def enqueue(self, roots: np.ndarray) -> slice:
         if self.state is None:
             self.state = self._init()
+            self.recorder = self._new_recorder()   # one stream per epoch
         lo = self.slot_hi
         self.state = self._enqueue(self.state, roots)
         self.slot_hi += int(roots.size)
@@ -193,7 +204,13 @@ class _PackedPool:
 
     def step(self) -> bool:
         if self.state is not None and not self._idle(self.state):
-            self.state = self._step(self.state)
+            if self.recorder is None:
+                self.state = self._step(self.state)
+            else:
+                from repro.obs.sweeplog import record_step, snapshot_state
+                pre = snapshot_state(self.state, self._kind)
+                self.state = self._step(self.state)
+                record_step(self.recorder, pre, self.state, self._kind)
             return True
         return False
 
@@ -226,6 +243,7 @@ class _PackedPool:
     def recycle(self) -> None:
         self._edges_done += self._edges_now()
         self.state = None
+        self.recorder = None     # the telemetry bundle keeps the stream
         self.slot_hi = 0
         self.epochs += 1
 
@@ -252,6 +270,10 @@ class _TropicalPool:
         self.state = None
         self.epochs = 0
         self._steps_done = 0
+        self._kind = "sssp"
+        self.recorder = None
+        self._new_recorder = svc._sweep_recorder_factory(
+            "dist_sssp" if eng.dwg is not None else "sssp")
         if eng.dwg is not None:
             from repro.core import dist_sssp as ds
             dwg = eng.dwg
@@ -280,6 +302,7 @@ class _TropicalPool:
     def enqueue(self, roots: np.ndarray) -> slice:
         if self.state is None:
             self.state = self._init()
+            self.recorder = self._new_recorder()   # one stream per epoch
         lo = self.slot_hi
         self.state = self._enqueue(self.state, roots)
         self.slot_hi += int(roots.size)
@@ -287,7 +310,13 @@ class _TropicalPool:
 
     def step(self) -> bool:
         if self.state is not None and not self._idle(self.state):
-            self.state = self._step(self.state)
+            if self.recorder is None:
+                self.state = self._step(self.state)
+            else:
+                from repro.obs.sweeplog import record_step, snapshot_state
+                pre = snapshot_state(self.state, self._kind)
+                self.state = self._step(self.state)
+                record_step(self.recorder, pre, self.state, self._kind)
             return True
         return False
 
@@ -306,6 +335,7 @@ class _TropicalPool:
     def recycle(self) -> None:
         self._steps_done += self._steps_now()
         self.state = None
+        self.recorder = None
         self.slot_hi = 0
         self.epochs += 1
 
@@ -331,10 +361,20 @@ class AnalyticsService:
                 f"pass a ServiceConfig OR overrides, not both — got "
                 f"config plus {sorted(overrides)}")
         self.config = config
+        self.telemetry = config.telemetry
+        # metrics always work (metrics_text() on a bare service exposes
+        # request/sojourn counters); sweep recording needs a telemetry
+        # bundle with record_sweeps on
+        if self.telemetry is not None:
+            self._registry = self.telemetry.registry
+        else:
+            from repro.obs.metrics import MetricsRegistry
+            self._registry = MetricsRegistry()
         self.engine = LaneEngine(
             g, ndev=config.ndev, lanes=(config.lanes or None),
             mode=config.mode, alpha=config.alpha, beta=config.beta,
-            max_pos=config.max_pos, probe_impl=config.probe_impl)
+            max_pos=config.max_pos, probe_impl=config.probe_impl,
+            telemetry=self.telemetry)   # inline batch sweeps record too
         # the service-wide tropical bucket width, resolved ONCE (the
         # engine executable compiles against it)
         self.delta = (_resolve_delta(self.engine, config.delta)
@@ -353,6 +393,44 @@ class AnalyticsService:
         self._cv = threading.Condition()
         self._thread: threading.Thread | None = None
         self._stopping = False
+
+    # -- telemetry ----------------------------------------------------------
+
+    def _sweep_recorder_factory(self, engine_name: str):
+        """Per-epoch recorder factory handed to the pools: each call is
+        one fresh ``SweepRecorder`` stream (or None when the service has
+        no telemetry bundle / sweep recording is off — the pools then
+        never touch ``repro.obs.sweeplog``)."""
+        if self.telemetry is None:
+            return lambda: None
+        tel, cfg = self.telemetry, self.config
+        return lambda: tel.recorder(engine_name, ndev=cfg.ndev,
+                                    source="service")
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the service's registry (the
+        telemetry bundle's registry when one was configured)."""
+        from repro.obs.metrics import metrics_text
+        return metrics_text(self._registry)
+
+    def trace_events(self) -> list:
+        """Chrome trace-event list of every request lifecycle seen so
+        far (QUEUED/RUNNING spans + early-readout markers on the layer
+        clock), plus one process per recorded sweep when a telemetry
+        bundle is recording — ready for ``obs.write_chrome_trace``."""
+        from repro.obs.traceviz import (service_trace_events,
+                                        sweep_trace_events)
+        with self._cv:
+            events = service_trace_events(list(self._records.values()))
+            sweeps = list(self.telemetry.sweeps) if self.telemetry else []
+        for i, rec in enumerate(sweeps):
+            events.extend(sweep_trace_events(rec, pid=10 + i))
+        return events
+
+    def _count_request(self, kind: str, status: str) -> None:
+        self._registry.counter(
+            "service_requests_total", "requests by admission outcome",
+            ("kind", "status")).labels(kind=kind, status=status).inc()
 
     # -- planning -----------------------------------------------------------
 
@@ -434,6 +512,7 @@ class AnalyticsService:
                 rec.reason = reason
             else:
                 self._pending.append(rec)
+            self._count_request(rec.kind, rec.status)
             self._records[request.id] = rec
             self._cv.notify_all()
             return rec
@@ -502,6 +581,11 @@ class AnalyticsService:
             if self._tropical is not None:
                 occ += self._tropical.active_lanes()
             self._occupancy.append(occ)
+            self._registry.counter(
+                "service_layers_total", "scheduler ticks").inc()
+            self._registry.gauge(
+                "service_occupancy_lanes",
+                "active engine lanes after the tick").set(occ)
             self._wall += time.perf_counter() - t0
             self._cv.notify_all()
             return self._busy_locked()
@@ -548,6 +632,13 @@ class AnalyticsService:
         rec.answered_early = early
         rec.status = DONE
         self._admission.on_done(rec.request.tenant)
+        self._registry.counter(
+            "service_answers_total", "answers by kind",
+            ("kind", "early")).labels(
+                kind=rec.kind, early=str(early).lower()).inc()
+        self._registry.histogram(
+            "service_sojourn_layers", "submit-to-answer layers",
+            ("kind",)).labels(kind=rec.kind).observe(rec.sojourn)
 
     # -- answer collection --------------------------------------------------
 

@@ -18,11 +18,16 @@ __all__ = ["percentile", "sojourn_summary", "summarize"]
 
 
 def percentile(xs, p: float) -> float:
-    """Nearest-rank-style percentile of a sequence (0 on empty)."""
-    xs = np.asarray(xs, np.float64)
+    """Nearest-rank percentile of a sequence (0 on empty): the smallest
+    observed value with at least ``p`` percent of the sample at or below
+    it — always an actual sample, never an interpolation. (The CI gates
+    pin p50/p99 sojourn; interpolated percentiles shift with sample size
+    even when the observed latencies don't.)"""
+    xs = np.sort(np.asarray(xs, np.float64))
     if xs.size == 0:
         return 0.0
-    return float(np.percentile(xs, p))
+    rank = int(np.ceil(p / 100.0 * xs.size))      # 1-based nearest rank
+    return float(xs[min(max(rank, 1), xs.size) - 1])
 
 
 def sojourn_summary(sojourns) -> dict:

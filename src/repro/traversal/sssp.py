@@ -436,7 +436,8 @@ def sssp_engine_result(state: SSSPState) -> SSSPResult:
 def sssp_pipelined(wg: WeightedCSRGraph, roots, delta=None,
                    lanes: int = DEFAULT_LANES, max_pos: int = 8,
                    relax_impl: str = "xla",
-                   max_steps: int = MAX_SSSP_STEPS) -> SSSPResult:
+                   max_steps: int = MAX_SSSP_STEPS,
+                   recorder=None) -> SSSPResult:
     """Answer an arbitrary number of SSSP sources in ONE pipelined sweep.
 
     Sources beyond the lane pool wait in the pending queue and stream
@@ -444,6 +445,11 @@ def sssp_pipelined(wg: WeightedCSRGraph, roots, delta=None,
     a many-bucket source never stalls shallow ones. ``delta=None`` picks
     ``default_delta(wg)``; a per-lane tuple (length == the effective lane
     count) hands each lane its own bucket width.
+
+    ``recorder`` (a ``repro.obs.SweepRecorder``) records a ``LayerRecord``
+    per engine step by stepping instead of the fused drain (shared
+    ``_sssp_body`` — distances, steps and traces bit-identical); None
+    (the default) touches nothing in ``repro.obs``.
     """
     roots = jnp.asarray(roots, jnp.int32).reshape(-1)
     num_roots = roots.shape[0]
@@ -455,6 +461,14 @@ def sssp_pipelined(wg: WeightedCSRGraph, roots, delta=None,
     delta = delta if isinstance(delta, tuple) else float(delta)
     state = sssp_engine_init(wg, capacity=num_roots, lanes=lanes)
     state = sssp_engine_enqueue(state, roots)
-    state = sssp_engine_drain(wg, state, delta, max_pos, relax_impl,
-                              max_steps)
+    if recorder is None:
+        state = sssp_engine_drain(wg, state, delta, max_pos, relax_impl,
+                                  max_steps)
+    else:
+        from repro.obs.sweeplog import drive_recorded
+        state = drive_recorded(
+            recorder, state,
+            lambda s: sssp_engine_step(wg, s, delta, max_pos, relax_impl,
+                                       max_steps),
+            sssp_engine_idle, kind="sssp")
     return sssp_engine_result(state)
