@@ -17,8 +17,11 @@
 #                         bytes-exchanged-per-step, dense vs compressed
 #   make bench-serve      AnalyticsService replay: streamed-vs-flush trace,
 #                         mix TEPS + p50/p99 sojourn + early-answer gain
-#   make trace-smoke      mixed-workload serve run -> sweep_trace.json
-#                         (Perfetto-loadable) + sweep_metrics.txt scrape
+#   make trace-smoke      mixed-workload serve run -> out/sweep_trace.json
+#                         (Perfetto-loadable) + out/sweep_metrics.txt scrape
+#   make serve-live       live HTTP plane at scale 10: /metrics, /healthz,
+#                         /v1 wire transport, flight log + doctor report
+#                         under out/ (Ctrl-C to stop)
 #   make ci-bench         fast benches -> BENCH_pr.json + regression gate
 #   make lint             ruff check + format check (rule set: ruff.toml)
 
@@ -27,7 +30,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-properties test-dist bench-smoke bench bench-dist \
         bench-dist2d bench-analytics bench-sssp bench-dist-sssp \
-        bench-serve trace-smoke ci-bench lint
+        bench-serve trace-smoke serve-live ci-bench lint
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -71,9 +74,17 @@ bench-serve:
 trace-smoke:
 	$(PYTHON) examples/sweep_trace.py
 
+serve-live:
+	mkdir -p out
+	$(PYTHON) -m repro.launch.serve_bfs --scale 10 --lanes 32 \
+	    --queries 24 --mix bfs:3,khop:2,reach:1,sssp:1 --listen 8321 \
+	    --serve-seconds 3600 --flight-out out/flight.jsonl \
+	    --doctor-out out/doctor.txt --slo-p99 500
+
 ci-bench:
 	$(PYTHON) benchmarks/ci_bench.py --out BENCH_pr.json \
-	    --baseline BENCH_baseline.json --tolerance 0.25
+	    --baseline BENCH_baseline.json --tolerance 0.25 \
+	    --history BENCH_history.jsonl
 
 lint:
 	ruff check .

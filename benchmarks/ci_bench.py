@@ -255,6 +255,48 @@ def _bench_obs_overhead(scale: int = 10, roots: int = 64,
                      teps_recorder_on=round(edges / max(wall_on, 1e-9))))}
 
 
+def append_history(path: str, benches: dict) -> dict | None:
+    """Append this run's ``{git_sha, benchmarks}`` entry to the JSONL
+    trajectory file and return the PREVIOUS entry (None on first run).
+    The sha comes from the environment (GITHUB_SHA in CI, GIT_SHA as a
+    local override) — no wall-clock in the entry, so replaying the bench
+    at the same sha appends an identical record."""
+    sha = os.environ.get("GITHUB_SHA") or os.environ.get("GIT_SHA") \
+        or "unknown"
+    prev = None
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    prev = json.loads(line)
+    entry = dict(git_sha=sha,
+                 benchmarks={k: round(v["value"], 6)
+                             for k, v in benches.items()})
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return prev
+
+
+def print_trend(benches: dict, prev: dict | None) -> None:
+    """Per-benchmark trend vs the previous history entry."""
+    if prev is None:
+        print("bench history: first entry, no trend yet")
+        return
+    print(f"bench trend vs {prev.get('git_sha', '?')[:12]}:")
+    prev_b = prev.get("benchmarks", {})
+    for name in sorted(benches):
+        cur = benches[name]["value"]
+        old = prev_b.get(name)
+        if old is None:
+            print(f"  {name:40s} {cur:12.4g}  (new)")
+        elif old == 0:
+            print(f"  {name:40s} {cur:12.4g}  (prev 0)")
+        else:
+            delta = cur / old - 1.0
+            print(f"  {name:40s} {cur:12.4g}  {delta:+.1%}")
+
+
 def compare(pr: dict, baseline: dict, tolerance: float) -> list[str]:
     """Regressions worse than the tolerance (fractional drop), as
     human-readable failure lines. A baseline entry may carry its own
@@ -286,6 +328,10 @@ def main() -> None:
                     help="also write the result to the --baseline path")
     ap.add_argument("--skip-dist", action="store_true",
                     help="skip the subprocess dist smoke (debug aid)")
+    ap.add_argument("--history", default=None, metavar="JSONL",
+                    help="append this run's {git_sha, benchmarks} to the "
+                         "JSONL trajectory file and print the trend vs "
+                         "the previous entry")
     args = ap.parse_args()
 
     t0 = time.perf_counter()
@@ -311,6 +357,10 @@ def main() -> None:
     for name in sorted(benches):
         b = benches[name]
         print(f"  {name:40s} {b['value']:12.4g} {b['unit']}")
+
+    if args.history:
+        prev = append_history(args.history, benches)
+        print_trend(benches, prev)
 
     if args.write_baseline and args.baseline:
         with open(args.baseline, "w") as f:

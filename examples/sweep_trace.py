@@ -3,22 +3,27 @@
   PYTHONPATH=src python examples/sweep_trace.py
 
 Replays a deterministic mixed BFS/k-hop/SSSP workload through the
-AnalyticsService with a ``Telemetry`` bundle attached, then exports:
+AnalyticsService with a ``Telemetry`` bundle attached, then exports
+under the (gitignored) ``out/`` scratch dir:
 
-* ``sweep_trace.json``  — Chrome trace-event JSON: request lifecycles
+* ``out/sweep_trace.json``  — Chrome trace-event JSON: request lifecycles
   (QUEUED → RUNNING spans, early-readout markers) plus one track per
   recorded engine sweep with per-layer TD/BU spans and frontier-density
   counters. Open it at https://ui.perfetto.dev ("Open trace file").
-* ``sweep_metrics.txt`` — Prometheus text exposition of the service
+* ``out/sweep_metrics.txt`` — Prometheus text exposition of the service
   counters (requests by kind/status, sojourn histogram, engine layers,
   edges relaxed).
 """
+import os
+
 from repro.graph.generator import rmat_weighted_graph
 from repro.obs import Telemetry, write_chrome_trace
 from repro.serving import AnalyticsService, ServiceConfig, synthetic_trace
 
-TRACE_OUT = "sweep_trace.json"
-METRICS_OUT = "sweep_metrics.txt"
+OUT_DIR = "out"
+TRACE_OUT = os.path.join(OUT_DIR, "sweep_trace.json")
+METRICS_OUT = os.path.join(OUT_DIR, "sweep_metrics.txt")
+os.makedirs(OUT_DIR, exist_ok=True)
 
 wg = rmat_weighted_graph(10, 16, seed=7)
 tel = Telemetry()

@@ -33,9 +33,12 @@ dispatch.
 """
 from __future__ import annotations
 
+import base64
 import itertools
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass, field, fields
 from typing import ClassVar
+
+import numpy as np
 
 from repro.analytics.closeness import ClosenessResult, closeness_centrality
 from repro.analytics.components import (ComponentsResult,
@@ -51,8 +54,9 @@ from repro.analytics.weighted import (SSSPDistancesResult, sssp_distances,
 __all__ = [
     "AnalyticsAnswer", "AnalyticsRequest", "BFSQuery", "ClosenessQuery",
     "ComponentsQuery", "DiameterQuery", "KHopQuery", "QUERY_KINDS",
-    "QUERY_TYPES", "ReachQuery", "SSSPQuery", "WeightedClosenessQuery",
-    "answer_request", "query_kind", "run_query",
+    "QUERY_TYPES", "RESULT_TYPES", "ReachQuery", "SSSPQuery",
+    "WeightedClosenessQuery", "answer_request", "query_kind",
+    "result_from_wire", "result_to_wire", "run_query",
 ]
 
 
@@ -235,6 +239,85 @@ class AnalyticsRequest:
                    arrival=int(wire.get("arrival", 0)))
 
 
+# ---------------------------------------------------------------------------
+# Result wire codec — full typed results over JSON, bit-identical.
+# ---------------------------------------------------------------------------
+
+# result-class-name -> class; the decode allow-list (mirrors QUERY_KINDS
+# on the answer side — an unknown result tag is ONE error path here too)
+RESULT_TYPES: dict[str, type] = {
+    t.__name__: t for t in (BFSResult, ClosenessResult, ComponentsResult,
+                            DiameterResult, KHopResult, ReachResult,
+                            SSSPDistancesResult)}
+
+
+def _encode_value(v):
+    """JSON-encode one result field. Arrays ship as raw little-endian
+    bytes (base64) + dtype/shape, so every dtype — int32 depths, uint64
+    frontier words, float32 distances, bools — round-trips BIT-identical
+    (no float-to-decimal detour). Tuples and QueryMeta are tagged so the
+    decode side rebuilds the exact in-process types."""
+    if isinstance(v, np.ndarray):
+        a = np.ascontiguousarray(v)
+        return {"__nd__": [a.dtype.str,  # byte-order-explicit dtype tag
+                           list(a.shape),
+                           base64.b64encode(a.tobytes()).decode("ascii")]}
+    if isinstance(v, np.generic):
+        return v.item()              # bare numpy scalar -> python scalar
+    if isinstance(v, QueryMeta):
+        d = {f.name: _encode_value(getattr(v, f.name))
+             for f in fields(QueryMeta)}
+        return {"__meta__": d}
+    if isinstance(v, tuple):
+        return {"__tuple__": [_encode_value(x) for x in v]}
+    if isinstance(v, dict):
+        return {k: _encode_value(x) for k, x in v.items()}
+    if v is None or isinstance(v, (str, int, float, bool)):
+        return v
+    raise TypeError(
+        f"result field of type {type(v).__name__!r} has no wire encoding")
+
+
+def _decode_value(v):
+    if isinstance(v, dict):
+        if "__nd__" in v:
+            dtype, shape, payload = v["__nd__"]
+            raw = base64.b64decode(payload.encode("ascii"))
+            return np.frombuffer(raw, dtype=np.dtype(dtype)).reshape(
+                shape).copy()
+        if "__meta__" in v:
+            kw = {k: _decode_value(x) for k, x in v["__meta__"].items()}
+            return QueryMeta(**kw)
+        if "__tuple__" in v:
+            return tuple(_decode_value(x) for x in v["__tuple__"])
+        return {k: _decode_value(x) for k, x in v.items()}
+    return v
+
+
+def result_to_wire(result) -> dict:
+    """JSON-serializable envelope of a full typed result;
+    ``result_from_wire`` rebuilds an equal value — every array
+    bit-identical (pinned in tests)."""
+    cls = type(result)
+    if cls.__name__ not in RESULT_TYPES:
+        raise TypeError(
+            f"unknown result type {cls.__name__!r} — expected one of "
+            f"{sorted(RESULT_TYPES)}")
+    data = {f.name: _encode_value(getattr(result, f.name))
+            for f in fields(cls)}
+    return {"type": cls.__name__, "fields": data}
+
+
+def result_from_wire(wire: dict):
+    cls = RESULT_TYPES.get(wire.get("type"))
+    if cls is None:
+        raise ValueError(
+            f"unknown result type {wire.get('type')!r} — expected one "
+            f"of {sorted(RESULT_TYPES)}")
+    kw = {k: _decode_value(v) for k, v in wire.get("fields", {}).items()}
+    return cls(**kw)
+
+
 @dataclass
 class AnalyticsAnswer:
     """The answer to one request: the workload's typed result plus the
@@ -243,12 +326,30 @@ class AnalyticsAnswer:
     result: Result
     meta: QueryMeta = field(default_factory=QueryMeta)
 
-    def to_wire(self) -> dict:
-        """JSON-serializable summary envelope (the typed result itself
-        stays in-process — arrays don't cross the wire)."""
+    def to_wire(self, include_result: bool = False) -> dict:
+        """JSON-serializable envelope. The default is the summary form
+        (meta only — cheap poll/debug surface); ``include_result=True``
+        ships the full typed result through ``result_to_wire``, so the
+        HTTP transport's answers decode bit-identical to the in-process
+        ones."""
         meta = {k: v for k, v in self.meta.as_dict().items()
                 if isinstance(v, (str, int, float, bool, type(None)))}
-        return dict(id=self.id, kind=self.meta.kind, meta=meta)
+        wire = dict(id=self.id, kind=self.meta.kind, meta=meta)
+        if include_result:
+            wire["result"] = result_to_wire(self.result)
+        return wire
+
+    @classmethod
+    def from_wire(cls, wire: dict) -> "AnalyticsAnswer":
+        """Rebuild a full answer from a ``to_wire(include_result=True)``
+        envelope (summary-only envelopes have no result to rebuild —
+        that raises)."""
+        if "result" not in wire:
+            raise ValueError(
+                "summary envelope has no result payload — produce it "
+                "with to_wire(include_result=True)")
+        result = result_from_wire(wire["result"])
+        return cls(id=wire["id"], result=result, meta=result.meta)
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,16 @@ retired back to the pool. This module provides:
       --burst 4 --every 2 [--validate] [--ndev 4] [--delta 0.05] \
       [--slots 256] [--tenants 2] [--tenant-quota 16] [--no-streaming]
 
+``--listen PORT`` switches to the LIVE path: the service runs its worker
+thread, an ``ObservabilityServer`` exposes /metrics, /healthz, /readyz,
+/debug/* and the /v1 submit/poll/result wire transport, the synthetic
+trace is submitted through the real front door, and the process stays up
+``--serve-seconds`` for external scrapes (the CI trace-smoke job curls
+it). ``--flight-out`` streams the per-layer flight log (JSONL),
+``--doctor-out`` writes the sweep-doctor audit of the recorded sweeps
+(see ``repro.obs.doctor``), and ``--slo-p99`` / ``--slo-queue-depth`` /
+``--slo-reject-rate`` arm the SLO watchdog behind /readyz.
+
 Latency is measured in engine *layers* (the deterministic unit of work);
 aggregate TEPS counts the packed engine's traversed edges only (weighted
 relaxation work is reported as ``sssp_steps``).
@@ -313,18 +323,52 @@ def main():
                     help="write a Perfetto-loadable Chrome trace JSON of "
                          "request lifecycles + per-layer sweep records "
                          "here after the run (enables sweep recording)")
+    ap.add_argument("--listen", type=int, default=None, metavar="PORT",
+                    help="serve the live observability/wire HTTP plane "
+                         "on this port (0 = auto-assign); the synthetic "
+                         "trace goes through the real submit/result "
+                         "front door and the process stays up "
+                         "--serve-seconds for external scrapes")
+    ap.add_argument("--serve-seconds", type=float, default=0.0,
+                    help="keep the HTTP plane up this long after the "
+                         "trace drains (Ctrl-C exits early)")
+    ap.add_argument("--flight-out", default=None, metavar="PATH",
+                    help="stream the per-layer JSONL flight log here "
+                         "(enables sweep recording)")
+    ap.add_argument("--doctor-out", default=None, metavar="PATH",
+                    help="write the sweep-doctor audit of the recorded "
+                         "sweeps here (enables sweep recording)")
+    ap.add_argument("--slo-p99", type=float, default=None,
+                    help="SLO: p99 submit-to-answer sojourn (layers)")
+    ap.add_argument("--slo-queue-depth", type=int, default=None,
+                    help="SLO: max pending-queue depth")
+    ap.add_argument("--slo-reject-rate", type=float, default=None,
+                    help="SLO: max reject rate over the rolling window")
     args = ap.parse_args()
-    if args.validate and (args.metrics_out or args.trace_out):
-        ap.error("--metrics-out/--trace-out ride the service path — "
-                 "drop --validate (the compat path has no telemetry)")
+    if args.validate and (args.metrics_out or args.trace_out
+                          or args.listen is not None or args.flight_out
+                          or args.doctor_out):
+        ap.error("--metrics-out/--trace-out/--listen/--flight-out/"
+                 "--doctor-out ride the service path — drop --validate "
+                 "(the compat path has no telemetry)")
 
     # weights always ride along: the CSR is bit-identical to rmat_graph's,
     # boolean-only mixes simply never read them
     g = rmat_weighted_graph(args.scale, args.edgefactor, args.seed)
     telemetry = None
-    if args.metrics_out or args.trace_out:
+    record = bool(args.trace_out or args.flight_out or args.doctor_out
+                  or args.listen is not None)
+    if record or args.metrics_out:
         from repro.obs import Telemetry
-        telemetry = Telemetry(record_sweeps=bool(args.trace_out))
+        telemetry = Telemetry(record_sweeps=record,
+                              flight_path=args.flight_out)
+    slo = None
+    if (args.slo_p99 is not None or args.slo_queue_depth is not None
+            or args.slo_reject_rate is not None):
+        from repro.obs import SLOConfig
+        slo = SLOConfig(p99_sojourn_layers=args.slo_p99,
+                        max_queue_depth=args.slo_queue_depth,
+                        max_reject_rate=args.slo_reject_rate)
     if args.validate:
         requests = make_requests(g, args.queries, mix=args.mix,
                                  seed=args.seed, khop_k=args.khop_k,
@@ -345,9 +389,21 @@ def main():
         max_pending=args.max_pending, tenant_quota=args.tenant_quota,
         mode=args.mode, probe_impl=args.probe_impl, ndev=args.ndev,
         delta=args.delta, streaming=not args.no_streaming,
-        telemetry=telemetry))
+        telemetry=telemetry, slo=slo))
     svc.warmup(tropical="sssp" in weights)
-    stats = svc.replay(trace)
+    if args.listen is not None:
+        stats = _serve_live(svc, trace, args)
+    else:
+        stats = svc.replay(trace)
+        _write_outputs(svc, telemetry, args, stats)
+        print(json.dumps(stats, indent=2))
+    if telemetry is not None:
+        telemetry.close()
+    return stats
+
+
+def _write_outputs(svc, telemetry, args, stats) -> None:
+    """Post-run artifacts shared by the replay and live paths."""
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             f.write(svc.metrics_text())
@@ -356,7 +412,54 @@ def main():
         from repro.obs import write_chrome_trace
         write_chrome_trace(args.trace_out, svc.trace_events())
         stats["trace_out"] = args.trace_out
-    print(json.dumps(stats, indent=2))
+    if args.doctor_out:
+        from repro.obs.doctor import diagnose
+        reports = [diagnose(rec.records, n=svc.engine.n,
+                            alpha=svc.config.alpha, beta=svc.config.beta,
+                            mode=svc.config.mode,
+                            registry=svc._registry)
+                   for rec in telemetry.sweeps if rec.records]
+        anomalies = sum(len(r.findings) for r in reports)
+        with open(args.doctor_out, "w") as f:
+            f.write("\n".join(r.text() for r in reports) + "\n")
+        stats["doctor_out"] = args.doctor_out
+        stats["doctor_anomalies"] = anomalies
+    if args.flight_out:
+        stats["flight_out"] = args.flight_out
+
+
+def _serve_live(svc, trace, args) -> dict:
+    """The ``--listen`` path: worker thread + HTTP plane, the synthetic
+    trace submitted through the REAL front door, artifacts written as
+    soon as the trace drains (so an external watcher may kill the
+    process any time after the 'trace drained' line), then the server
+    held open ``--serve-seconds`` for external scrapes."""
+    import time
+
+    from repro.obs import ObservabilityServer
+
+    svc.start()
+    with ObservabilityServer(svc, port=args.listen) as obs:
+        # the readiness marker external drivers (CI) wait for
+        print(f"listening on {obs.url}", flush=True)
+        for env in sorted(trace, key=lambda r: r.arrival):
+            svc.submit(env)
+        from repro.serving.admission import REJECTED
+        for env in trace:
+            if svc.record(env.id).status != REJECTED:
+                svc.result(env.id, timeout=600.0)
+        stats = svc.stats()
+        _write_outputs(svc, svc.telemetry, args, stats)
+        print(json.dumps(stats, indent=2), flush=True)
+        print("trace drained; serving until deadline", flush=True)
+        deadline = time.monotonic() + max(args.serve_seconds, 0.0)
+        try:
+            while time.monotonic() < deadline:
+                time.sleep(0.2)
+        except KeyboardInterrupt:
+            pass
+    svc.stop()
+    return stats
 
 
 if __name__ == "__main__":

@@ -27,9 +27,14 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.obs.doctor import (DoctorReport, Finding, diagnose, diagnose_log,
+                              records_from_jsonl, replay_switch,
+                              split_sweeps)
 from repro.obs.metrics import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
                                MetricsRegistry, default_registry,
                                metrics_text)
+from repro.obs.server import ObservabilityServer
+from repro.obs.slo import SLOConfig, SLOMonitor
 from repro.obs.sweeplog import (LayerRecord, SweepRecorder, drive_recorded,
                                 record_step, snapshot_state)
 from repro.obs.traceviz import (FlightSink, service_trace_events,
@@ -37,10 +42,13 @@ from repro.obs.traceviz import (FlightSink, service_trace_events,
                                 write_chrome_trace)
 
 __all__ = [
-    "Counter", "DEFAULT_BUCKETS", "FlightSink", "Gauge", "Histogram",
-    "LayerRecord", "MetricsRegistry", "SweepRecorder", "Telemetry",
-    "default_registry", "drive_recorded", "metrics_text", "record_step",
-    "service_trace_events", "snapshot_state", "sweep_trace_events",
+    "Counter", "DEFAULT_BUCKETS", "DoctorReport", "Finding", "FlightSink",
+    "Gauge", "Histogram", "LayerRecord", "MetricsRegistry",
+    "ObservabilityServer", "SLOConfig", "SLOMonitor", "SweepRecorder",
+    "Telemetry", "default_registry", "diagnose", "diagnose_log",
+    "drive_recorded", "metrics_text", "record_step",
+    "records_from_jsonl", "replay_switch", "service_trace_events",
+    "snapshot_state", "split_sweeps", "sweep_trace_events",
     "validate_trace_events", "write_chrome_trace",
 ]
 
@@ -72,7 +80,15 @@ class Telemetry:
         rec = SweepRecorder(engine=engine, meta=meta,
                             registry=self.registry, sink=self._sink)
         self.sweeps.append(rec)
-        del self.sweeps[:-self.max_sweeps]
+        dropped = len(self.sweeps) - self.max_sweeps
+        if dropped > 0:
+            # no silent caps: eviction from the bounded sweep list is
+            # visible on the scrape surface
+            self.registry.counter(
+                "obs_sweeps_dropped_total",
+                "recorded sweeps evicted by the max_sweeps bound").inc(
+                    dropped)
+            del self.sweeps[:-self.max_sweeps]
         return rec
 
     def last_sweep(self) -> SweepRecorder | None:

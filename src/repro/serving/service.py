@@ -80,7 +80,10 @@ class ServiceConfig:
     ``service.metrics_text()`` and, when ``record_sweeps`` is on, every
     pool epoch records a per-layer ``SweepRecorder`` stream (None — the
     default — keeps the pools on the recorder-off fast path; a private
-    registry still serves the request/sojourn metrics)."""
+    registry still serves the request/sojourn metrics). ``slo`` is an
+    optional ``repro.obs.slo.SLOConfig`` — the service then runs an
+    ``SLOMonitor`` fed per admission/answer/tick, and its health feeds
+    ``health()['ready']`` (the /readyz bit)."""
     lanes: int = 0               # packed pool width; 0 = adaptive
     slots: int = 256             # packed queue slots per epoch
     sssp_lanes: int = 0          # tropical pool width; 0 = engine default
@@ -96,6 +99,7 @@ class ServiceConfig:
     delta: float | str | None = None
     streaming: bool = True
     telemetry: object = None     # repro.obs.Telemetry bundle (optional)
+    slo: object = None           # repro.obs.slo.SLOConfig (optional)
 
     def __post_init__(self):
         if self.slots < 1 or self.sssp_slots < 1:
@@ -393,6 +397,12 @@ class AnalyticsService:
         self._cv = threading.Condition()
         self._thread: threading.Thread | None = None
         self._stopping = False
+        if config.slo is not None:
+            from repro.obs.slo import SLOMonitor
+            self.slo: SLOMonitor | None = SLOMonitor(config.slo,
+                                                     self._registry)
+        else:
+            self.slo = None
 
     # -- telemetry ----------------------------------------------------------
 
@@ -513,6 +523,8 @@ class AnalyticsService:
             else:
                 self._pending.append(rec)
             self._count_request(rec.kind, rec.status)
+            if self.slo is not None:
+                self.slo.observe_admission(ok)
             self._records[request.id] = rec
             self._cv.notify_all()
             return rec
@@ -586,6 +598,9 @@ class AnalyticsService:
             self._registry.gauge(
                 "service_occupancy_lanes",
                 "active engine lanes after the tick").set(occ)
+            if self.slo is not None:
+                self.slo.observe_queue_depth(self._admission.pending)
+                self.slo.evaluate()
             self._wall += time.perf_counter() - t0
             self._cv.notify_all()
             return self._busy_locked()
@@ -639,6 +654,8 @@ class AnalyticsService:
         self._registry.histogram(
             "service_sojourn_layers", "submit-to-answer layers",
             ("kind",)).labels(kind=rec.kind).observe(rec.sojourn)
+        if self.slo is not None:
+            self.slo.observe_sojourn(rec.sojourn)
 
     # -- answer collection --------------------------------------------------
 
@@ -836,6 +853,34 @@ class AnalyticsService:
                 delta=(None if self._tropical is None else
                        (self.delta if isinstance(self.delta, tuple)
                         else float(self.delta))))
+
+    # -- health -------------------------------------------------------------
+
+    def worker_alive(self) -> bool:
+        """True while the background worker thread is up and not asked
+        to stop. Lock-free — safe to call from a liveness probe even
+        while a long jitted layer holds the scheduler lock."""
+        t = self._thread
+        return t is not None and t.is_alive() and not self._stopping
+
+    def health(self) -> dict:
+        """JSON-ready liveness + readiness view (the /healthz and
+        /readyz payload). Deliberately lock-free: every field is a
+        single-attribute read or an SLO ``peek()`` (non-mutating), so a
+        health probe never waits on the scheduler lock."""
+        alive = self.worker_alive()
+        depth = self._admission.pending
+        queue_ok = depth < self.config.max_pending
+        out = dict(alive=alive, stopping=self._stopping,
+                   queue_depth=depth,
+                   max_pending=self.config.max_pending,
+                   queue_ok=queue_ok, layer=self._layer)
+        slo_ok = True
+        if self.slo is not None:
+            out["slo"] = snap = self.slo.peek()
+            slo_ok = snap["healthy"]
+        out["ready"] = bool(alive and queue_ok and slo_ok)
+        return out
 
     # -- worker thread ------------------------------------------------------
 

@@ -1,0 +1,269 @@
+"""Sweep-doctor tests (``repro.obs.doctor``).
+
+Four surfaces:
+
+* oracle parity — ``replay_switch`` is bit-identical to the jitted
+  ``core.hybrid.switch_direction`` over random and boundary counters
+  (the float32 casts matter: that is the whole point of the oracle);
+* the acceptance pins — a seeded mis-switched layer on a synthetic
+  ``LayerRecord`` trace is flagged (layer, slot, wasted edges), and a
+  healthy scale-10 recorded sweep audits to ZERO anomalies;
+* the other anomaly families — exchange regression against the
+  dense baseline, queue stalls, lane starvation (and the healthy drain
+  tail that must NOT flag);
+* the post-mortem path — JSONL flight-log round-trip, mixed-stream sweep
+  splitting, the CLI.
+"""
+import json
+
+import numpy as np
+
+from repro.core.hybrid import ALPHA_DEFAULT, BETA_DEFAULT
+from repro.graph.generator import rmat_graph
+from repro.obs import (FlightSink, LayerRecord, MetricsRegistry,
+                       SweepRecorder, diagnose, diagnose_log,
+                       records_from_jsonl, replay_switch, split_sweeps)
+from repro.obs.doctor import main as doctor_main
+
+# ---------------------------------------------------------------------------
+# oracle parity
+# ---------------------------------------------------------------------------
+
+
+def test_replay_switch_matches_jitted_rule():
+    import jax.numpy as jnp
+
+    from repro.core.hybrid import switch_direction
+    rng = np.random.default_rng(7)
+    cases = [(bool(td), int(ef), int(vf), int(eu), int(n))
+             for td, ef, vf, eu, n in zip(
+                 rng.integers(0, 2, 150), rng.integers(0, 10_000, 150),
+                 rng.integers(0, 3_000, 150), rng.integers(0, 10_000, 150),
+                 rng.integers(1, 5_000, 150))]
+    # boundary cases where the float32 comparison is exact-equal
+    cases += [(True, 100, 0, 1400, 1024), (False, 0, 42, 0, 1008),
+              (True, 0, 0, 0, 1), (False, 0, 0, 0, 1)]
+    for td, ef, vf, eu, n in cases:
+        got = replay_switch(td, ef, vf, eu, n, ALPHA_DEFAULT, BETA_DEFAULT)
+        ref = bool(switch_direction(
+            jnp.asarray(td), jnp.asarray(ef), jnp.asarray(vf),
+            jnp.asarray(eu), n, ALPHA_DEFAULT, BETA_DEFAULT))
+        assert got == ref, (td, ef, vf, eu, n)
+
+
+# ---------------------------------------------------------------------------
+# synthetic LayerRecord traces
+# ---------------------------------------------------------------------------
+
+
+def _bfs_record(layer, *, slots=(), rows=(), dirs=(), vf=(), ef=(), eu=(),
+                active=None, exch_bytes=0, exch_format="none"):
+    active = max(1, len(slots)) if active is None else active
+    mode = ("idle" if not dirs
+            else "td" if set(dirs) == {0}
+            else "bu" if set(dirs) == {1} else "mixed")
+    return LayerRecord(
+        layer=layer, engine="msbfs", kind="bfs", mode=mode,
+        active_lanes=active, frontier_words=8, frontier_density=0.1,
+        edges_relaxed=int(sum(np.where(np.array(dirs) == 0,
+                                       ef, eu))) if dirs else 0,
+        words_touched=16, exch_bytes=exch_bytes, exch_format=exch_format,
+        wall_ms=0.1, slots=slots, rows=rows, dirs=dirs, vf=vf, ef=ef,
+        eu=eu)
+
+
+def test_seeded_mis_switch_is_flagged():
+    """The acceptance pin: a recorded direction the oracle disagrees
+    with is reported with its layer, slot and the wasted-edge
+    estimate."""
+    n, alpha, beta = 100, 2.0, 2.0
+    # layer 0: ef=10 <= eu/alpha=50 -> oracle says stay TD, but the
+    # trace records BU: 90 wasted edges (eu=100 inspected vs ef=10)
+    # layer 1: continuing from the RECORDED direction (BU), vf=60 >=
+    # n/beta=50 -> stays BU, recorded BU: agreement — one finding only,
+    # the mis-switch must not cascade
+    records = [
+        _bfs_record(0, slots=(0,), rows=(0,), dirs=(1,), vf=(30,),
+                    ef=(10,), eu=(100,)),
+        _bfs_record(1, slots=(0,), rows=(1,), dirs=(1,), vf=(60,),
+                    ef=(40,), eu=(80,)),
+    ]
+    reg = MetricsRegistry()
+    rep = diagnose(records, n=n, alpha=alpha, beta=beta, registry=reg)
+    assert not rep.ok()
+    assert rep.decisions_audited == 2
+    assert [f.kind for f in rep.findings] == ["mis_switch"]
+    f = rep.findings[0]
+    assert f.layer == 0 and f.slot == 0 and f.wasted_edges == 90
+    assert "oracle picks TD" in f.message
+    assert rep.wasted_edges() == 90
+    assert "ANOMALIES" in rep.text() and "mis_switch" in rep.text()
+    text = reg.expose()
+    assert 'obs_doctor_findings_total{kind="mis_switch"} 1' in text
+    assert "obs_doctor_decisions_total 2" in text
+    # the same counters with the recorded direction corrected audit clean
+    healthy = [
+        _bfs_record(0, slots=(0,), rows=(0,), dirs=(0,), vf=(30,),
+                    ef=(10,), eu=(100,)),
+        _bfs_record(1, slots=(0,), rows=(1,), dirs=(0,), vf=(60,),
+                    ef=(40,), eu=(80,)),
+    ]
+    assert diagnose(healthy, n=n, alpha=alpha, beta=beta).ok()
+
+
+def test_healthy_scale10_sweep_audits_clean():
+    """The acceptance pin: a real recorded hybrid sweep at scale 10 —
+    pipelined engine, queue refills and all — replays with ZERO
+    anomalies (the oracle agrees with every recorded decision by
+    construction)."""
+    from repro.core.msbfs import msbfs_pipelined
+    g = rmat_graph(10, edgefactor=16, seed=0)
+    rec = SweepRecorder(engine="msbfs")
+    roots = np.arange(64, dtype=np.int32) % g.n
+    msbfs_pipelined(g, roots, lanes=32, recorder=rec)
+    rep = diagnose(rec.records, n=g.n)
+    assert rep.decisions_audited >= roots.size   # >= one decision per root
+    assert rep.ok(), rep.text()
+    assert "OK — no anomalies" in rep.text()
+
+
+def test_switch_audit_skips_without_context():
+    records = [_bfs_record(0, slots=(0,), rows=(0,), dirs=(1,), vf=(1,),
+                           ef=(1,), eu=(100,))]
+    rep = diagnose(records)                       # no n: audit skipped
+    assert rep.ok() and rep.decisions_audited == 0
+    assert any("pass n" in note for note in rep.notes)
+    rep = diagnose(records, n=100, mode="bottomup")  # forced direction
+    assert rep.ok() and any("forces" in note for note in rep.notes)
+    assert diagnose([]).layers == 0
+
+
+def test_exchange_regression_against_dense_baseline():
+    records = [
+        _bfs_record(0, exch_bytes=1000, exch_format="dense"),
+        _bfs_record(1, exch_bytes=400, exch_format="compressed"),
+        _bfs_record(2, exch_bytes=1500, exch_format="compressed"),
+    ]
+    rep = diagnose(records)
+    assert rep.exchange_audited
+    kinds = [(f.kind, f.layer) for f in rep.findings]
+    assert kinds == [("exchange_regression", 2)]
+    assert rep.findings[0].detail["dense_bytes"] == 1000
+    # explicit baseline overrides inference; higher baseline clears it
+    assert diagnose(records, dense_bytes=1500).ok()
+    # all-compressed stream with no baseline: skipped, and says so
+    rep = diagnose(records[1:])
+    assert not rep.exchange_audited and rep.ok()
+    assert any("no dense" in note for note in rep.notes)
+
+
+def test_queue_stall_and_lane_starvation():
+    def occ(layer, active):
+        return _bfs_record(layer, active=active)
+
+    # a zero-active step mid-sweep is a stall; one at the very end is
+    # just the sweep finishing
+    rep = diagnose([occ(0, 4), occ(1, 0), occ(2, 4), occ(3, 0)])
+    assert [f.kind for f in rep.findings] == ["queue_stall"]
+    assert rep.findings[0].layer == 1
+    # sustained low occupancy that RECOVERS is starvation...
+    low_then_recover = [occ(0, 8), occ(1, 8), occ(2, 1), occ(3, 1),
+                        occ(4, 1), occ(5, 8), occ(6, 8)]
+    rep = diagnose(low_then_recover)
+    assert [f.kind for f in rep.findings] == ["lane_starvation"]
+    assert rep.findings[0].layer == 2
+    assert rep.findings[0].detail["run_layers"] == 3
+    # ...but the natural drain tail of a finishing sweep never flags
+    drain_tail = [occ(0, 8), occ(1, 8), occ(2, 1), occ(3, 1), occ(4, 1)]
+    assert diagnose(drain_tail).ok()
+
+
+# ---------------------------------------------------------------------------
+# flight-log surface
+# ---------------------------------------------------------------------------
+
+
+def _record_real_sweep(path=None):
+    from repro.core.msbfs import msbfs_pipelined
+    g = rmat_graph(8, edgefactor=8, seed=41)
+    sink = FlightSink(path) if path else None
+    rec = SweepRecorder(engine="msbfs", sink=sink)
+    msbfs_pipelined(g, np.arange(12, dtype=np.int32), lanes=8,
+                    recorder=rec)
+    if sink:
+        sink.close()
+    return g, rec
+
+
+def test_records_from_jsonl_round_trip(tmp_path):
+    path = str(tmp_path / "flight.jsonl")
+    g, rec = _record_real_sweep(path)
+    back = records_from_jsonl(path)
+    assert back == rec.records                  # frozen-dataclass equality
+    assert diagnose(back, n=g.n).ok()
+
+
+def test_split_sweeps_mixed_stream():
+    a1 = [_bfs_record(i) for i in range(3)]
+    a2 = [_bfs_record(i) for i in range(2)]     # layer resets -> new sweep
+    b = [LayerRecord(layer=i, engine="sssp", kind="sssp", mode="light",
+                     active_lanes=1, frontier_words=1,
+                     frontier_density=0.5, edges_relaxed=1,
+                     words_touched=1, exch_bytes=0, exch_format="none",
+                     wall_ms=0.1) for i in range(2)]
+    # interleave as a shared flight sink would see them
+    stream = [a1[0], b[0], a1[1], b[1], a1[2], a2[0], a2[1]]
+    sweeps = split_sweeps(stream)
+    assert [len(s) for s in sweeps] == [3, 2, 2]
+    assert sweeps[0] == a1 and sweeps[1] == a2 and sweeps[2] == b
+    reports = diagnose_log(stream, n=100)
+    assert len(reports) == 3
+    assert {r.kind for r in reports} == {"bfs", "sssp"}
+    # the sssp report notes it carries no TD/BU decision
+    sssp_rep = next(r for r in reports if r.kind == "sssp")
+    assert any("no TD/BU" in note for note in sssp_rep.notes)
+
+
+def test_doctor_cli(tmp_path, capsys):
+    path = str(tmp_path / "flight.jsonl")
+    g, rec = _record_real_sweep(path)
+    out = str(tmp_path / "doctor.txt")
+    rc = doctor_main([path, "--n", str(g.n), "--fail-on-findings",
+                      "--out", out])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "OK — no anomalies" in text and "0 anomalies" in text
+    with open(out) as f:
+        assert "OK — no anomalies" in f.read()
+    # a corrupt flight log (mis-switched layer injected) exits nonzero
+    bad = str(tmp_path / "bad.jsonl")
+    with open(path) as f:
+        lines = [json.loads(ln) for ln in f]
+    flipped = False
+    for ln in lines:
+        if not flipped and ln["dirs"]:
+            ln["dirs"] = [1 - d for d in ln["dirs"]]
+            flipped = True
+    assert flipped
+    with open(bad, "w") as f:
+        for ln in lines:
+            f.write(json.dumps(ln) + "\n")
+    rc = doctor_main([bad, "--n", str(g.n), "--fail-on-findings"])
+    assert rc == 1
+    assert "mis_switch" in capsys.readouterr().out
+    # --json emits the structured report
+    rc = doctor_main([path, "--n", str(g.n), "--json"])
+    assert rc == 0
+    payload = capsys.readouterr().out
+    doc = json.loads(payload[:payload.rindex("]") + 1])
+    assert doc and doc[0]["counts"] == {}
+
+
+def test_finding_and_report_dict_views():
+    records = [_bfs_record(0, slots=(0,), rows=(0,), dirs=(1,), vf=(1,),
+                           ef=(1,), eu=(50,))]
+    rep = diagnose(records, n=1000, alpha=2.0, beta=2.0)
+    d = rep.as_dict()
+    assert d["counts"] == {"mis_switch": 1}
+    assert d["findings"][0]["kind"] == "mis_switch"
+    assert json.dumps(d)                         # JSON-clean

@@ -372,3 +372,20 @@ def test_telemetry_bundle_off_returns_none():
     assert tel.sweeps == [] and tel.last_sweep() is None
     tel.registry.counter("still_works_total").inc()
     assert "still_works_total 1" in tel.metrics_text()
+
+
+def test_telemetry_sweep_eviction_is_counted():
+    """No silent caps: every sweep evicted by the ``max_sweeps`` bound
+    bumps ``obs_sweeps_dropped_total`` on the bundle's registry."""
+    tel = Telemetry(max_sweeps=3)
+    recs = [tel.recorder("msbfs") for _ in range(3)]
+    assert tel.sweeps == recs                   # under the bound: no drop
+    assert "obs_sweeps_dropped_total" not in tel.metrics_text()
+    tel.recorder("msbfs")
+    tel.recorder("msbfs")
+    assert len(tel.sweeps) == 3                 # bound held...
+    kept = [id(r) for r in tel.sweeps]          # ...oldest two evicted
+    # identity, not ==: empty recorders are value-equal dataclasses
+    assert id(recs[0]) not in kept and id(recs[1]) not in kept
+    assert id(recs[2]) in kept
+    assert "obs_sweeps_dropped_total 2" in tel.metrics_text()

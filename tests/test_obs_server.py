@@ -1,0 +1,280 @@
+"""Live observability plane tests (``repro.obs.server`` + wire codec).
+
+The ObservabilityServer is the ROADMAP's "real socket/HTTP transport"
+rung, so the bar is parity: answers fetched over ``/v1/submit`` ->
+``/v1/poll`` -> ``/v1/result`` must decode BIT-identical to in-process
+``run_query``. Around that: the result wire codec round-trips every
+typed result (uint64 frontier words, float inf distances, bools — raw
+little-endian bytes, no decimal detour), ``/metrics`` scrapes valid
+Prometheus text mid-run with monotone counters, ``/healthz`` flips
+unhealthy the moment the worker stops, ``/readyz`` tracks the SLO
+monitor, and the error paths answer the right codes (400/404/202/409).
+"""
+import dataclasses
+import json
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.analytics import (BFSQuery, ClosenessQuery, ComponentsQuery,
+                             DiameterQuery, KHopQuery, LaneEngine,
+                             ReachQuery, SSSPQuery, run_query)
+from repro.analytics.api import (AnalyticsAnswer, AnalyticsRequest,
+                                 result_from_wire, result_to_wire)
+from repro.graph.generator import rmat_weighted_graph
+from repro.obs import ObservabilityServer, SLOConfig, Telemetry
+from repro.serving import DONE, QUEUED, REJECTED, AnalyticsService
+
+
+@pytest.fixture(scope="module")
+def wg():
+    """Weighted R-MAT graph: serves every query kind incl. sssp."""
+    return rmat_weighted_graph(8, 8, seed=3)
+
+
+@pytest.fixture(scope="module")
+def offline(wg):
+    return LaneEngine(wg)
+
+
+# ---------------------------------------------------------------------------
+# HTTP plumbing (stdlib client — the server must need nothing more)
+# ---------------------------------------------------------------------------
+
+
+def _get(url):
+    try:
+        with urllib.request.urlopen(url, timeout=60) as r:
+            return r.status, r.read().decode()
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode()
+
+
+def _get_json(url):
+    code, body = _get(url)
+    return code, json.loads(body)
+
+
+def _post_json(url, payload):
+    req = urllib.request.Request(
+        url, data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"}, method="POST")
+    try:
+        with urllib.request.urlopen(req, timeout=60) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def _wait_done(base, request_id, timeout=120.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        code, body = _get_json(f"{base}/v1/poll/{request_id}")
+        assert code == 200, body
+        if body["status"] == DONE:
+            return
+        assert body["status"] != REJECTED, body
+        time.sleep(0.05)
+    raise TimeoutError(f"{request_id} never reached DONE")
+
+
+def _counter_total(text, name):
+    """Sum a counter over its label series in Prometheus text."""
+    total = 0.0
+    for line in text.splitlines():
+        head, _, val = line.rpartition(" ")
+        if head == name or head.startswith(name + "{"):
+            total += float(val)
+    return total
+
+
+def _assert_results_equal(got, ref, *, check_meta=True):
+    assert type(got) is type(ref)
+    for f in dataclasses.fields(ref):
+        a, b = getattr(got, f.name), getattr(ref, f.name)
+        if f.name == "meta":
+            if check_meta:
+                assert a.as_dict() == b.as_dict()
+            continue
+        if isinstance(b, np.ndarray):
+            assert isinstance(a, np.ndarray), f.name
+            assert a.dtype == b.dtype, f.name
+            assert a.shape == b.shape, f.name
+            np.testing.assert_array_equal(a, b, err_msg=f.name)
+        else:
+            assert a == b, f.name
+
+
+# ---------------------------------------------------------------------------
+# result wire codec — every typed result round-trips bit-identical
+# ---------------------------------------------------------------------------
+
+
+def test_result_wire_codec_round_trips_every_kind(wg, offline):
+    queries = [
+        BFSQuery(sources=(0, 3, 5)),
+        KHopQuery(sources=(1, 2), k=2),            # uint lane words
+        ReachQuery(sources=(0, 1), targets=(2, 3)),
+        ClosenessQuery(sources=(0, 1, 2, 3), chunk=4),
+        SSSPQuery(sources=(0, 4)),                 # float dist incl. inf
+        ComponentsQuery(batch=32),
+        DiameterQuery(num_seeds=2, seed=0),
+    ]
+    for q in queries:
+        ref = run_query(offline, q)
+        # through real JSON text, exactly like the HTTP body
+        wire = json.loads(json.dumps(result_to_wire(ref)))
+        back = result_from_wire(wire)
+        _assert_results_equal(back, ref)
+    # inf distances must survive (raw bytes, not decimal text)
+    sssp = run_query(offline, SSSPQuery(sources=(0,)))
+    if np.isinf(sssp.dist).any():
+        back = result_from_wire(json.loads(json.dumps(result_to_wire(sssp))))
+        np.testing.assert_array_equal(back.dist, sssp.dist)
+    with pytest.raises(TypeError, match="unknown result type"):
+        result_to_wire(object())
+    with pytest.raises(ValueError, match="unknown result type"):
+        result_from_wire({"type": "NopeResult"})
+
+
+# ---------------------------------------------------------------------------
+# the live plane: wire parity + mid-run scrape + debug surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_live_wire_round_trip_scrape_and_debug(wg, offline):
+    tel = Telemetry()
+    svc = AnalyticsService(wg, streaming=False, telemetry=tel,
+                           slo=SLOConfig(p99_sojourn_layers=1e9))
+    queries = dict(
+        khop=KHopQuery(sources=(1, 2), k=2),
+        reach=ReachQuery(sources=(0, 1), targets=(2, 3)),
+        sssp=SSSPQuery(sources=(0, 4)),
+    )
+    with svc, ObservabilityServer(svc) as obs:
+        base = obs.url
+        code, before = _get(f"{base}/metrics")
+        assert code == 200
+        code, ready = _get_json(f"{base}/readyz")
+        assert code == 200 and ready["ready"] and ready["alive"]
+        assert ready["slo"]["healthy"]
+
+        # submit through the front door, by wire envelope
+        for name, q in queries.items():
+            env = AnalyticsRequest(query=q, id=f"wire-{name}", tenant="t")
+            code, body = _post_json(f"{base}/v1/submit", env.to_wire())
+            assert code == 200, body
+            assert body["id"] == env.id and body["status"] == QUEUED
+        for name in queries:
+            _wait_done(base, f"wire-{name}")
+
+        # answers over the wire decode bit-identical to run_query
+        for name, q in queries.items():
+            code, wire = _get_json(f"{base}/v1/result/wire-{name}")
+            assert code == 200, wire
+            ans = AnalyticsAnswer.from_wire(wire)
+            assert ans.id == f"wire-{name}"
+            assert ans.meta is ans.result.meta
+            _assert_results_equal(ans.result, run_query(offline, q),
+                                  check_meta=False)
+
+        # mid-run scrape: still valid Prometheus text, counters monotone
+        code, after = _get(f"{base}/metrics")
+        assert code == 200
+        assert "# TYPE service_requests_total counter" in after
+        assert "service_sojourn_layers" in after
+        reqs_before = _counter_total(before, "service_requests_total")
+        reqs_after = _counter_total(after, "service_requests_total")
+        assert reqs_after >= reqs_before + len(queries)
+        assert _counter_total(after, "http_requests_total") > 0
+        # path labels stay normalized — no per-id series
+        assert 'path="/v1/poll"' in after and "wire-khop" not in after
+
+        # debug surfaces: request lifecycles + recorded sweeps
+        code, views = _get_json(f"{base}/debug/requests")
+        assert code == 200
+        by_id = {v["id"]: v for v in views}
+        for name in queries:
+            assert by_id[f"wire-{name}"]["status"] == DONE
+            assert by_id[f"wire-{name}"]["sojourn"] >= 1
+        code, sweeps = _get_json(f"{base}/debug/sweeps")
+        assert code == 200 and sweeps
+        assert "records" not in sweeps[0]
+        code, full = _get_json(f"{base}/debug/sweeps?full=1")
+        assert code == 200
+        assert full[0]["records"], "full=1 must inline the LayerRecords"
+        assert {"layer", "mode", "active_lanes"} <= set(
+            full[0]["records"][0])
+
+
+def test_healthz_flips_unhealthy_after_stop(wg):
+    svc = AnalyticsService(wg)
+    svc.start()
+    with ObservabilityServer(svc) as obs:
+        code, h = _get_json(f"{obs.url}/healthz")
+        assert code == 200 and h["alive"] and not h["stopping"]
+        svc.stop()
+        # the HTTP plane outlives the worker — that is the point of a
+        # liveness probe: it must answer 503, not refuse the connection
+        code, h = _get_json(f"{obs.url}/healthz")
+        assert code == 503 and not h["alive"]
+        code, h = _get_json(f"{obs.url}/readyz")
+        assert code == 503 and not h["ready"]
+
+
+def test_readyz_tracks_slo_breach(wg, offline):
+    # every sojourn is >= 1 layer, so a 0.5-layer p99 target breaches on
+    # the first answered request — deterministically
+    svc = AnalyticsService(wg, slo=SLOConfig(p99_sojourn_layers=0.5))
+    with svc, ObservabilityServer(svc) as obs:
+        rec = svc.submit(KHopQuery(sources=(5,), k=1))
+        svc.result(rec.request.id, timeout=120.0)
+        code, h = _get_json(f"{obs.url}/healthz")
+        assert code == 200, "liveness is not readiness"
+        code, h = _get_json(f"{obs.url}/readyz")
+        assert code == 503 and h["alive"] and not h["ready"]
+        slo = h["slo"]
+        assert not slo["healthy"]
+        assert not slo["healthy_per_target"]["p99_sojourn_layers"]
+        assert slo["observed"]["p99_sojourn_layers"] >= 1
+        code, text = _get(f"{obs.url}/metrics")
+        assert 'slo_breaches_total{slo="p99_sojourn_layers"} 1' in text
+        assert "slo_healthy 0" in text
+
+
+def test_error_paths(wg):
+    # worker NOT started: submissions stay QUEUED, so the pending (202)
+    # and rejected (409) result paths are deterministic
+    svc = AnalyticsService(wg, max_pending=1)
+    with ObservabilityServer(svc) as obs:
+        base = obs.url
+        code, body = _get_json(f"{base}/nope")
+        assert code == 404 and "no route" in body["error"]
+        code, body = _get_json(f"{base}/v1/poll/ghost")
+        assert code == 404
+        code, body = _get_json(f"{base}/v1/result/ghost")
+        assert code == 404
+        code, body = _post_json(f"{base}/v1/submit",
+                                {"kind": "nope", "query": {}})
+        assert code == 400 and "unknown query tag" in body["error"]
+
+        env = AnalyticsRequest(query=KHopQuery(sources=(0,), k=1), id="q1")
+        code, body = _post_json(f"{base}/v1/submit", env.to_wire())
+        assert code == 200 and body["status"] == QUEUED
+        code, body = _get_json(f"{base}/v1/result/q1")
+        assert code == 202 and body["status"] == QUEUED
+
+        # duplicate id is a client error, not a server crash
+        code, body = _post_json(f"{base}/v1/submit", env.to_wire())
+        assert code == 400 and "duplicate" in body["error"]
+
+        # queue full: admission rejects, the result route says 409
+        env2 = AnalyticsRequest(query=KHopQuery(sources=(1,), k=1), id="q2")
+        code, body = _post_json(f"{base}/v1/submit", env2.to_wire())
+        assert code == 200 and body["status"] == REJECTED
+        assert body["reason"]
+        code, body = _get_json(f"{base}/v1/result/q2")
+        assert code == 409 and body["status"] == REJECTED
